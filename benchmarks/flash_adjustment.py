@@ -1,0 +1,72 @@
+"""§Perf: separate the S^2 (attention-quadratic) HBM traffic from the
+linear-in-tokens traffic, per layer, by compiling the SAME global token
+count at two sequence lengths:
+
+    bytes(S) = linear + quad * S        (per token)
+    =>  quad-part(S0) = (bytes(S0) - bytes(S0/2)) * 2      [per layer]
+
+The quadratic part is exactly what the Pallas flash-attention kernel keeps
+in VMEM (kernels/flash_attention tiles never hit HBM), so
+``flash-adjusted memory = measured - quad-part`` is the memory roofline
+term with the kernel deployed. The XLA cost model cannot express this
+fusion, hence the measurement. Run standalone:
+
+    PYTHONPATH=src python -m benchmarks.flash_adjustment --arch <id> --shape <s>
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+import argparse
+import json
+
+import jax  # noqa: E402
+
+
+def measure(arch: str, shape_name: str) -> dict:
+    from repro.configs import registry
+    from repro.launch import shapes as S
+    from repro.launch.dryrun import _compile_case, _calib_cfg, _measure
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = registry.get(arch)
+    mesh = make_production_mesh()
+    case0 = S.SHAPES[shape_name]
+    out = {}
+    for tag, seq_div in (("full", 1), ("half", 2)):
+        small = S.ShapeCase(case0.name, case0.kind,
+                            case0.seq_len // seq_div,
+                            case0.global_batch * seq_div)
+        S.SHAPES[shape_name] = small
+        try:
+            mb = dict(microbatches=1) if case0.kind == "train" else {}
+            _, c1, _, _ = _compile_case(_calib_cfg(cfg, 1, 1), shape_name,
+                                        mesh, **mb)
+            _, c2, _, _ = _compile_case(_calib_cfg(cfg, 2, 1), shape_name,
+                                        mesh, **mb)
+            m1, m2 = _measure(c1), _measure(c2)
+            out[tag] = {k: m2[k] - m1[k] for k in ("flops", "bytes")}
+        finally:
+            S.SHAPES[shape_name] = case0
+    quad = {k: 2.0 * (out["full"][k] - out["half"][k]) for k in out["full"]}
+    linear = {k: out["full"][k] - quad[k] for k in quad}
+    return {"arch": arch, "shape": shape_name,
+            "per_layer_full": out["full"], "per_layer_quadratic": quad,
+            "per_layer_linear": linear,
+            "flash_adjusted_bytes_per_layer": max(linear["bytes"], 0.0)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rec = measure(args.arch, args.shape)
+    print(json.dumps(rec, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

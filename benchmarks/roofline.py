@@ -1,0 +1,153 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x shape x mesh) from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOPs)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+All inputs are per-device (XLA reports the per-device module; the dry-run's
+calibration corrects for scan-body undercounting), so the chips factor
+cancels. Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI. MODEL_FLOPS = 6*N*D (train) or 2*N_active*D (inference) catches
+remat/redundancy waste via the MODEL/HLO ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s / link
+
+SHAPE_TOKENS = {            # global tokens processed per step
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128,      # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: dict) -> float:
+    n_active = rec["active_param_count"]
+    toks = SHAPE_TOKENS[rec["shape"]]
+    if rec["shape"] == "train_4k":
+        return 6.0 * n_active * toks
+    return 2.0 * n_active * toks
+
+
+def analyze(rec: dict) -> dict:
+    corr = rec.get("corrected_per_device") or {
+        "flops": rec["flops_per_device"],
+        "bytes": rec["bytes_accessed_per_device"],
+        "coll_bytes": rec["collective_bytes_per_device"]}
+    compute_s = corr["flops"] / PEAK_FLOPS
+    memory_s = corr["bytes"] / HBM_BW
+    coll_s = corr["coll_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = corr["flops"] * rec["n_devices"]
+    ratio = mf / hlo_total if hlo_total else 0.0
+    bound_s = max(terms.values())
+    step_tokens = SHAPE_TOKENS[rec["shape"]]
+    return {"arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": coll_s, "dominant": dominant,
+            "model_flops": mf, "hlo_flops_total": hlo_total,
+            "useful_ratio": ratio,
+            "roofline_step_s": bound_s,
+            "tokens_per_s_bound": step_tokens / bound_s if bound_s else 0.0,
+            "advice": _advice(dominant, ratio)}
+
+
+def _advice(dominant: str, ratio: float) -> str:
+    if dominant == "compute" and ratio < 0.4:
+        return ("compute-bound with low useful ratio: cut recompute/attention "
+                "waste (flash kernel, remat policy) or shed redundant FLOPs")
+    if dominant == "compute":
+        return "compute-bound near useful peak: only larger chips/batch help"
+    if dominant == "memory":
+        return ("memory-bound: raise arithmetic intensity — fuse, widen "
+                "microbatches, keep weights resident (fewer re-reads)")
+    return ("collective-bound: reshard to cut cross-axis traffic or overlap "
+            "collectives with compute (async, one-axis-at-a-time)")
+
+
+def load(results_dir: str = "benchmarks/dryrun_results") -> list:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "flops_per_device" in rec:     # skip auxiliary artifacts
+            recs.append(rec)
+    return recs
+
+
+def table(rows: list) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | bound tok/s |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+            f"| {r['collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['tokens_per_s_bound']:.3g} |")
+    return "\n".join(lines)
+
+
+def compare_table(base_rows: list, opt_rows: list) -> str:
+    """Baseline vs optimized (§Perf) side-by-side, keyed by (arch, shape)."""
+    opt = {(r["arch"], r["shape"], r["mesh"]): r for r in opt_rows}
+    hdr = ("| arch | shape | base max-term s (dom) | opt max-term s (dom) | "
+           "gain |")
+    lines = [hdr, "|---|---|---|---|---|"]
+    for b in base_rows:
+        key = (b["arch"], b["shape"], b["mesh"])
+        o = opt.get(key)
+        if o is None:
+            continue
+        gain = b["roofline_step_s"] / o["roofline_step_s"] \
+            if o["roofline_step_s"] else float("inf")
+        lines.append(
+            f"| {b['arch']} | {b['shape']} "
+            f"| {b['roofline_step_s']:.3g} ({b['dominant'][:4]}) "
+            f"| {o['roofline_step_s']:.3g} ({o['dominant'][:4]}) "
+            f"| {gain:.2f}x |")
+    return "\n".join(lines)
+
+
+def run() -> list:
+    recs = load()
+    rows = [analyze(r) for r in recs]
+    os.makedirs("benchmarks", exist_ok=True)
+    with open("benchmarks/roofline_table.md", "w") as f:
+        f.write(table(rows) + "\n")
+    opt_recs = load("benchmarks/dryrun_results_opt")
+    out = []
+    if opt_recs:
+        opt_rows = [analyze(r) for r in opt_recs]
+        with open("benchmarks/roofline_table_opt.md", "w") as f:
+            f.write(table(opt_rows) + "\n\n")
+            f.write(compare_table(rows, opt_rows) + "\n")
+        base_by = {(r["arch"], r["shape"], r["mesh"]): r for r in rows}
+        for o in opt_rows:
+            b = base_by.get((o["arch"], o["shape"], o["mesh"]))
+            if b and b["roofline_step_s"]:
+                out.append((f"perf_gain_{o['arch']}_{o['shape']}_{o['mesh']}",
+                            b["roofline_step_s"] / o["roofline_step_s"],
+                            f"x step-bound vs baseline ({b['dominant']}"
+                            f"->{o['dominant']})"))
+    for r in rows:
+        out.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                    r["roofline_step_s"] * 1e6,
+                    f"{r['dominant']}-bound, useful={r['useful_ratio']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in [analyze(x) for x in load()]:
+        print(r)

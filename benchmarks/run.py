@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+and beyond-paper comparisons. Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig5", "benchmarks.fig5_time_vs_layers"),
+    ("fig6", "benchmarks.fig6_queue_throughput"),
+    ("fig7", "benchmarks.fig7_worker_status"),
+    ("table", "benchmarks.table_critical_mass"),
+    ("population", "benchmarks.bench_population_vs_queue"),
+    ("workers", "benchmarks.bench_worker_scaling"),
+    ("serving", "benchmarks.bench_serving"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated keys: " +
+                    ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    keys = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if keys and key not in keys:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # noqa: BLE001 — report and continue (fail forward)
+            failures += 1
+            print(f"{key}_ERROR,0,{type(e).__name__}: {e}", file=sys.stderr)
+        finally:
+            print(f"# {key}: {time.perf_counter() - t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""End-to-end driver (the paper's kind of workload): a layer-design study
+of a few hundred DNN trainings, scheduled across the population (vmapped)
+and queue planes, reproducing the paper's three findings:
+
+  F1 critical mass: accuracy flatlines past a capacity threshold
+  F2 linear cost:   training time ~linear in layer count
+  F3 activations:   activation choice materially moves accuracy
+
+    PYTHONPATH=src python examples/layer_design_sweep.py [--n-tasks 240]
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--n-tasks", "240",
+                                             "--plane", "auto",
+                                             "--out", "sweep_out"])
+from repro.launch.sweep import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

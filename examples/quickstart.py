@@ -1,0 +1,39 @@
+"""Quickstart: the paper's pipeline in ~30 lines.
+
+CSV "upload" -> preprocess (fill/scale/one-hot/split) -> enqueue a small
+layer-design sweep -> worker drains it -> query results.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (ResultStore, SearchSpace, Session, TaskQueue, Worker,
+                        reporting)
+from repro.data import pipeline, synthetic
+
+# 1. "Upload" a CSV (here: synthetic with injected missing cells).
+csv_text = synthetic.classification_csv(800, 8, 3, seed=0)
+dataset = pipeline.prepare(csv_text, label="label")     # fill, scale, one-hot, 80/20
+print(f"dataset: {dataset.x_train.shape} train, {dataset.n_classes} classes")
+
+# 2. A session + sweep over layer designs (the paper's objective).
+session = Session(TaskQueue(), ResultStore())
+space = SearchSpace(hidden_layer_counts=(1, 2), hidden_widths=(16, 64),
+                    activation_sets=(("relu",), ("tanh",)), epochs=2,
+                    batch_size=128)
+tasks = space.tasks(session.session_id)
+session.queue.put_many(tasks)
+session.register_tasks(len(tasks))
+print(f"enqueued {len(tasks)} training tasks")
+
+# 3. A worker drains the queue (add workers = add machines).
+Worker("w0", session.queue, session.results,
+       {"datasets": {"default": dataset}}).run_until_empty()
+print("progress:", session.progress())
+
+# 4. Query the result store (the paper's MongoDB + plot.ly stage).
+rows = reporting.accuracy_vs_capacity(session.results, session.session_id)
+print(reporting.to_markdown(rows, ["params", "mean accuracy"]))
+best = max(session.results.find(session.session_id, status="ok"),
+           key=lambda d: d["metrics"]["accuracy"])
+print("best design:", best["params"]["hidden_sizes"],
+      best["params"]["activations"],
+      f"acc={best['metrics']['accuracy']:.3f}")

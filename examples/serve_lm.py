@@ -1,0 +1,22 @@
+"""Batched serving demo: continuous batching over a reduced assigned arch.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m]
+"""
+import argparse
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+    sys.argv = [sys.argv[0], "--arch", args.arch,
+                "--requests", str(args.requests)]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

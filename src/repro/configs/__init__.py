@@ -1,0 +1,1 @@
+from repro.configs.base import MLPConfig, ModelConfig, MoEConfig, RGLRUConfig, SSMConfig  # noqa: F401

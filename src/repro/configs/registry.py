@@ -1,0 +1,70 @@
+"""Config registry: --arch <id> -> ModelConfig, full or reduced.
+
+Reduced variants keep the family's structure (block pattern, MoE routing,
+qk-norm, enc-dec split) at CPU-smoke scale: <=3 layers (one block for
+hybrids), d_model <= 512, <= 4 experts, small vocab. Full configs are only
+ever lowered abstractly (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import MLPConfig, ModelConfig, MoEConfig, SSMConfig
+
+from repro.configs.granite_moe_3b_a800m import CONFIG as _granite3b
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.starcoder2_7b import CONFIG as _starcoder2
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.pixtral_12b import CONFIG as _pixtral
+from repro.configs.qwen3_4b import CONFIG as _qwen4b
+from repro.configs.granite_moe_1b_a400m import CONFIG as _granite1b
+from repro.configs.qwen3_1_7b import CONFIG as _qwen17b
+from repro.configs.paper_mlp import CONFIG as PAPER_MLP
+
+REGISTRY: Dict[str, ModelConfig] = {c.arch_id: c for c in [
+    _granite3b, _nemo, _rgemma, _mamba2, _starcoder2, _seamless, _pixtral,
+    _qwen4b, _granite1b, _qwen17b,
+]}
+
+ARCH_IDS = sorted(REGISTRY)
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    """Same family, CPU-smoke scale."""
+    kw = dict(
+        d_model=256, vocab_size=512, norm_eps=cfg.norm_eps,
+        dtype="float32", param_dtype="float32",
+    )
+    if cfg.n_heads:
+        kw.update(n_heads=4, n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+                  head_dim=64)
+    if cfg.d_ff:
+        kw.update(d_ff=512)
+    if cfg.moe:
+        kw["moe"] = dataclasses.replace(cfg.moe, n_experts=4, top_k=2,
+                                        expert_d_ff=128)
+    if cfg.ssm:
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=32, head_dim=32,
+                                        chunk_size=16)
+    if cfg.rglru:
+        kw["rglru"] = dataclasses.replace(cfg.rglru, lru_width=256)
+    if cfg.tail_pattern:
+        kw["tail_pattern"] = ()
+    # one block of the pattern (hybrid: 3 layers; others: 2 layers)
+    kw["n_layers"] = max(2, len(cfg.block_pattern))
+    if len(cfg.block_pattern) == 1:
+        kw["n_layers"] = 2
+    if cfg.is_encdec:
+        kw["n_enc_layers"] = 2
+    if cfg.window:
+        kw["window"] = 16
+    kw["long_context_window"] = 32
+    return cfg.replace(**kw)
+
+
+def get(arch_id: str, *, reduced: bool = False) -> ModelConfig:
+    cfg = REGISTRY[arch_id]
+    return reduce_config(cfg) if reduced else cfg

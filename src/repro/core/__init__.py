@@ -1,0 +1,22 @@
+"""The paper's contribution: a distributed DNN layer-design sweep engine.
+
+Control plane: TaskQueue (queue.py) + Worker/WorkerPool (worker.py) +
+ResultStore (results.py) + Session (session.py) — the RabbitMQ/Celery/
+MongoDB/Flask quartet of the 2015 system, journal-backed and daemon-free.
+
+Data plane: plan_sweep (scheduler.py) + train_population (population.py) —
+the TPU-native vmapped-ensemble execution of shape-homogeneous task blocks.
+
+SearchSpace (sweep.py) enumerates the layer designs; reporting.py renders
+the paper's figures from stored results.
+"""
+from repro.core.queue import TaskQueue  # noqa: F401
+from repro.core.results import ResultStore  # noqa: F401
+from repro.core.session import Session  # noqa: F401
+from repro.core.sweep import SearchSpace  # noqa: F401
+from repro.core.tasks import TaskSpec, shape_signature  # noqa: F401
+from repro.core.worker import Worker, WorkerPool, register_executor  # noqa: F401
+from repro.core import executors  # noqa: F401  (registers built-in executors)
+from repro.core.scheduler import plan_sweep  # noqa: F401
+from repro.core.population import train_population  # noqa: F401
+from repro.core import reporting  # noqa: F401

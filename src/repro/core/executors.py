@@ -1,0 +1,127 @@
+"""Task executors: the training functions Celery runs on the workers.
+
+``dnn_train`` is the paper's workload (tabular MLP with swept layer design);
+``lm_train`` extends the same machinery to the assigned LM architecture zoo
+(reduced configs — the full configs are dry-run-only).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLPConfig
+from repro.core.worker import register_executor
+from repro.data import pipeline, synthetic, tokens
+from repro.models.dnn import dnn_loss, forward_dnn, init_dnn
+from repro.optim import adamw, sgd, schedules
+from repro.train.step import build_dnn_train_step
+
+
+def _get_dataset(payload: Dict[str, Any], context: Dict[str, Any]):
+    """Datasets come from the session context (the paper's uploaded CSV) or a
+    synthetic descriptor embedded in the payload."""
+    ref = payload.get("dataset", "default")
+    data = context.get("datasets", {})
+    if ref in data:
+        return data[ref]
+    if isinstance(ref, dict) and ref.get("synthetic"):
+        csv = synthetic.classification_csv(
+            ref.get("n", 2000), ref.get("features", 16),
+            ref.get("classes", 4), seed=ref.get("seed", 0))
+        ds = pipeline.prepare(csv, "label", seed=ref.get("seed", 0))
+        context.setdefault("datasets", {})[str(ref)] = ds
+        return ds
+    raise KeyError(f"dataset {ref!r} not found in session context")
+
+
+@register_executor("dnn_train")
+def dnn_train(payload: Dict[str, Any], context: Dict[str, Any]):
+    ds = _get_dataset(payload, context)
+    cfg = MLPConfig(
+        n_features=ds.n_features, n_classes=ds.n_classes,
+        hidden_sizes=tuple(payload.get("hidden_sizes", (64,))),
+        activations=tuple(payload.get("activations", ("relu",))),
+        dropout=float(payload.get("dropout", 0.0)))
+    if payload.get("fail"):                      # test hook for fail-forward
+        raise RuntimeError("injected failure")
+    lr = float(payload.get("lr", 1e-3))
+    opt_name = payload.get("optimizer", "adam")  # the Keras/PyBrain axis
+    if opt_name == "adam":
+        opt_init, opt_update = adamw(lr, weight_decay=0.0)
+    else:
+        opt_init, opt_update = sgd(lr, momentum=0.9)
+    key = jax.random.PRNGKey(int(payload.get("seed", 0)))
+    params = init_dnn(key, cfg)
+    opt_state = opt_init(params)
+    step = jax.jit(build_dnn_train_step(cfg, opt_update, dnn_loss))
+    epochs = int(payload.get("epochs", 3))
+    bs = int(payload.get("batch_size", 128))
+    t0 = time.perf_counter()
+    loss = jnp.zeros(())
+    t_steady = None
+    for ep in range(epochs):
+        if ep == 1:                      # epoch 0 includes jit compilation
+            jax.block_until_ready(loss)
+            t_steady = time.perf_counter()
+        for batch in pipeline.batches(ds.x_train, ds.y_train, bs, seed=ep):
+            jb = {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])}
+            params, opt_state, m = step(params, opt_state, jb)
+            loss = m["loss"]
+    jax.block_until_ready(loss)
+    train_time = time.perf_counter() - t0
+    steady_epoch_time = ((time.perf_counter() - t_steady) / (epochs - 1)
+                         if t_steady and epochs > 1 else train_time / epochs)
+    # test-set evaluation (the paper's held-out 20%)
+    logits = forward_dnn(params, cfg, jnp.asarray(ds.x_test))
+    acc = float(jnp.mean((jnp.argmax(logits, -1)
+                          == jnp.argmax(jnp.asarray(ds.y_test), -1))))
+    if not np.isfinite(float(loss)):
+        raise FloatingPointError("training diverged (non-finite loss)")
+    return {"accuracy": acc, "final_loss": float(loss),
+            "train_time": train_time,
+            "steady_epoch_time": steady_epoch_time,   # compile excluded
+            "n_params": int(sum(x.size for x in jax.tree.leaves(params))),
+            "n_hidden_layers": len(cfg.hidden_sizes)}
+
+
+@register_executor("lm_train")
+def lm_train(payload: Dict[str, Any], context: Dict[str, Any]):
+    """Train a reduced LM-zoo config for a few steps on synthetic tokens."""
+    from repro.configs import registry as cfg_registry
+    from repro.models import transformer as T
+    from repro.train.step import build_lm_train_step
+
+    cfg = cfg_registry.get(payload["arch"], reduced=True)
+    steps = int(payload.get("steps", 5))
+    bs = int(payload.get("batch_size", 4))
+    seq = int(payload.get("seq_len", 32))
+    key = jax.random.PRNGKey(int(payload.get("seed", 0)))
+    params = T.init_lm(key, cfg)
+    opt_init, opt_update = adamw(float(payload.get("lr", 3e-4)))
+    opt_state = opt_init(params)
+    step = jax.jit(build_lm_train_step(cfg, opt_update))
+    stream = tokens.TokenStream(cfg.vocab_size, seq, bs,
+                                seed=int(payload.get("seed", 0)))
+    t0 = time.perf_counter()
+    losses = []
+    for i, batch in zip(range(steps), stream):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        b = _attach_stub_inputs(cfg, b, bs, seq)
+        params, opt_state, m = step(params, opt_state, b)
+        losses.append(float(m["loss"]))
+    return {"final_loss": losses[-1], "first_loss": losses[0],
+            "train_time": time.perf_counter() - t0, "steps": steps}
+
+
+def _attach_stub_inputs(cfg, batch, bs, seq):
+    if cfg.is_encdec:
+        batch["enc_embeds"] = jnp.zeros((bs, max(seq // 2, 4), cfg.d_model),
+                                        cfg.activation_dtype)
+    elif cfg.embed_stub:
+        batch["embeds"] = jnp.zeros((bs, max(seq // 4, 2), cfg.d_model),
+                                    cfg.activation_dtype)
+    return batch

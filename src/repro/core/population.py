@@ -1,0 +1,124 @@
+"""Population plane: vmapped ensemble training of shape-homogeneous tasks.
+
+The TPU-native re-expression of the paper's worker pool (DESIGN.md §2): K
+tasks that compile to the same program are stacked on a leading population
+axis (init seeds and learning rates differ per member; lr is a traced
+scalar so the graph is shared) and trained as ONE jitted program. On a mesh
+the population axis is sharded over ("pod","data") via NamedSharding, so
+throughput scales with chips at zero dispatch cost.
+
+Fail-forward happens *in-graph*: members whose loss goes non-finite are
+frozen (their updates masked out) and reported as failed — a diverging
+design can't poison its cohort, mirroring the queue's error isolation.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLPConfig
+from repro.core.results import ResultStore
+from repro.core.tasks import TaskSpec
+from repro.data import pipeline
+from repro.models.dnn import dnn_loss, forward_dnn, init_dnn
+from repro.optim import adamw, sgd
+
+
+def _block_config(block: List[TaskSpec], ds) -> MLPConfig:
+    p0 = block[0].payload
+    return MLPConfig(n_features=ds.n_features, n_classes=ds.n_classes,
+                     hidden_sizes=tuple(p0["hidden_sizes"]),
+                     activations=tuple(p0.get("activations", ("relu",))),
+                     dropout=float(p0.get("dropout", 0.0)))
+
+
+def train_population(block: List[TaskSpec], context: Dict[str, Any], *,
+                     results: Optional[ResultStore] = None,
+                     mesh=None, population_axes=("data",)) -> List[dict]:
+    """Train every task in `block` simultaneously. Returns result docs (and
+    inserts them into `results` if given)."""
+    from repro.core.executors import _get_dataset  # shared dataset resolution
+
+    ds = _get_dataset(block[0].payload, context)
+    cfg = _block_config(block, ds)
+    K = len(block)
+    p0 = block[0].payload
+    epochs = int(p0.get("epochs", 3))
+    bs = int(p0.get("batch_size", 128))
+    opt_name = p0.get("optimizer", "adam")
+    lrs = jnp.asarray([float(t.payload.get("lr", 1e-3)) for t in block],
+                      jnp.float32)
+    seeds = [int(t.payload.get("seed", i)) for i, t in enumerate(block)]
+
+    # --- stacked init ---
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+    params = jax.vmap(lambda k: init_dnn(k, cfg))(keys)
+
+    def make_opt(lr):
+        return adamw(lr, weight_decay=0.0) if opt_name == "adam" \
+            else sgd(lr, momentum=0.9)
+
+    opt_init, _ = make_opt(1e-3)
+    opt_state = jax.vmap(opt_init)(params)
+
+    def member_step(params_i, opt_state_i, lr_i, alive_i, batch):
+        _, opt_update = make_opt(lr_i)
+        (loss, aux), grads = jax.value_and_grad(dnn_loss, has_aux=True)(
+            params_i, cfg, batch)
+        new_p, new_s, _ = opt_update(grads, opt_state_i, params_i)
+        ok = jnp.isfinite(loss) & alive_i
+        # freeze members that diverged (in-graph fail-forward)
+        new_p = jax.tree.map(lambda a, b: jnp.where(ok, b, a), params_i, new_p)
+        new_s = jax.tree.map(
+            lambda a, b: jnp.where(ok, b, a) if a.ndim == b.ndim else a,
+            opt_state_i, new_s)
+        return new_p, new_s, ok, loss
+
+    pop_step = jax.jit(jax.vmap(member_step, in_axes=(0, 0, 0, 0, None)))
+
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        pop_sharding = NamedSharding(mesh, P(population_axes))
+        lrs = jax.device_put(lrs, pop_sharding)
+
+    alive = jnp.ones((K,), bool)
+    losses = jnp.zeros((K,), jnp.float32)
+    t0 = time.perf_counter()
+    for ep in range(epochs):
+        for batch in pipeline.batches(ds.x_train, ds.y_train, bs, seed=ep):
+            jb = {"x": jnp.asarray(batch["x"]), "y": jnp.asarray(batch["y"])}
+            params, opt_state, alive, losses = pop_step(params, opt_state,
+                                                        lrs, alive, jb)
+    jax.block_until_ready(losses)
+    wall = time.perf_counter() - t0
+
+    # --- stacked evaluation ---
+    logits = jax.jit(jax.vmap(lambda p: forward_dnn(p, cfg,
+                                                    jnp.asarray(ds.x_test))))(params)
+    acc = jnp.mean((jnp.argmax(logits, -1)
+                    == jnp.argmax(jnp.asarray(ds.y_test), -1)[None]), axis=-1)
+    acc, alive_np, losses_np = map(np.asarray, (acc, alive, losses))
+
+    docs = []
+    n_params = int(sum(x.size for x in jax.tree.leaves(
+        jax.tree.map(lambda a: a[0], params))))
+    for i, t in enumerate(block):
+        ok = bool(alive_np[i]) and np.isfinite(losses_np[i])
+        doc = dict(task_id=t.task_id, session_id=t.session_id,
+                   status="ok" if ok else "failed",
+                   train_time=wall / K,  # amortized
+                   metrics={"accuracy": float(acc[i]),
+                            "final_loss": float(losses_np[i]),
+                            "n_params": n_params,
+                            "n_hidden_layers": len(cfg.hidden_sizes),
+                            "population_size": K, "wall_time_block": wall},
+                   params=t.payload,
+                   error=None if ok else "diverged (frozen in-graph)")
+        if results is not None:
+            results.insert(**doc)
+        docs.append(doc)
+    return docs

@@ -1,0 +1,151 @@
+"""Persistent task queue — the RabbitMQ of the system, without the daemon.
+
+Semantics (mirroring AMQP work-queues as the paper uses them):
+  * ``put``      — publish, durable (journaled before visible).
+  * ``get``      — consume with a lease (visibility timeout); a leased task
+                   is invisible to other consumers until acked/nacked or the
+                   lease expires (crash recovery — the paper's dispensable
+                   workers).
+  * ``ack``      — task done, removed.
+  * ``nack``     — failure; requeued until max_retries, then dead-lettered.
+  * priorities   — higher first, FIFO within a priority.
+
+Durability: an append-only JSON-lines journal. Reopening a queue replays the
+journal; outstanding leases are restored as pending (at-least-once delivery).
+The journal is also the dashboard's data source (paper Fig 6).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.tasks import TaskSpec
+
+
+class TaskQueue:
+    def __init__(self, journal_path: Optional[str] = None):
+        self._lock = threading.Lock()
+        self._heap: List[Tuple[int, int, str]] = []   # (-priority, seq, id)
+        self._seq = itertools.count()
+        self._tasks: Dict[str, TaskSpec] = {}
+        self._leased: Dict[str, float] = {}            # id -> deadline
+        self._retries: Dict[str, int] = {}
+        self._dead: List[str] = []
+        self._acked: set = set()
+        self._journal_path = journal_path
+        self._journal = None
+        if journal_path:
+            if os.path.exists(journal_path):
+                self._replay(journal_path)
+            self._journal = open(journal_path, "a", buffering=1)
+
+    # ------------------------------------------------------------ journal
+    def _log(self, op: str, **kw):
+        if self._journal:
+            self._journal.write(json.dumps({"op": op, "t": time.time(), **kw})
+                                + "\n")
+
+    def _replay(self, path: str):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                rec = json.loads(line)
+                op = rec["op"]
+                if op == "put":
+                    spec = TaskSpec.from_json(rec["task"])
+                    self._tasks[spec.task_id] = spec
+                    heapq.heappush(self._heap,
+                                   (-spec.priority, next(self._seq),
+                                    spec.task_id))
+                elif op == "ack":
+                    self._acked.add(rec["id"])
+                elif op == "nack":
+                    self._retries[rec["id"]] = rec.get("retries", 0)
+                elif op == "dead":
+                    self._dead.append(rec["id"])
+        # drop completed/dead from pending
+        gone = self._acked | set(self._dead)
+        self._heap = [h for h in self._heap if h[2] not in gone]
+        heapq.heapify(self._heap)
+
+    # ------------------------------------------------------------ api
+    def put(self, spec: TaskSpec):
+        with self._lock:
+            self._log("put", task=spec.to_json())
+            self._tasks[spec.task_id] = spec
+            heapq.heappush(self._heap,
+                           (-spec.priority, next(self._seq), spec.task_id))
+
+    def put_many(self, specs):
+        for s in specs:
+            self.put(s)
+
+    def get(self, lease_seconds: float = 300.0) -> Optional[TaskSpec]:
+        with self._lock:
+            self._expire_locked()
+            while self._heap:
+                _, _, tid = heapq.heappop(self._heap)
+                if tid in self._acked or tid in self._dead:
+                    continue
+                self._leased[tid] = time.time() + lease_seconds
+                self._log("lease", id=tid)
+                return self._tasks[tid]
+            return None
+
+    def ack(self, task_id: str):
+        with self._lock:
+            self._leased.pop(task_id, None)
+            self._acked.add(task_id)
+            self._log("ack", id=task_id)
+
+    def nack(self, task_id: str):
+        """Failure: requeue up to max_retries, then dead-letter."""
+        with self._lock:
+            self._leased.pop(task_id, None)
+            n = self._retries.get(task_id, 0) + 1
+            self._retries[task_id] = n
+            spec = self._tasks[task_id]
+            if n > spec.max_retries:
+                self._dead.append(task_id)
+                self._log("dead", id=task_id)
+            else:
+                self._log("nack", id=task_id, retries=n)
+                heapq.heappush(self._heap,
+                               (-spec.priority, next(self._seq), task_id))
+
+    def _expire_locked(self):
+        now = time.time()
+        expired = [tid for tid, dl in self._leased.items() if dl < now]
+        for tid in expired:
+            del self._leased[tid]
+            spec = self._tasks[tid]
+            heapq.heappush(self._heap,
+                           (-spec.priority, next(self._seq), tid))
+            self._log("expire", id=tid)
+
+    # ------------------------------------------------------------ stats
+    def depth(self) -> int:
+        with self._lock:
+            return len([1 for h in self._heap
+                        if h[2] not in self._acked and h[2] not in self._dead])
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"pending": len(self._heap), "leased": len(self._leased),
+                    "acked": len(self._acked), "dead": len(self._dead)}
+
+    def dead_letters(self) -> List[TaskSpec]:
+        with self._lock:
+            return [self._tasks[t] for t in self._dead]
+
+    def close(self):
+        if self._journal:
+            self._journal.close()
+            self._journal = None

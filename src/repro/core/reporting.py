@@ -1,0 +1,118 @@
+"""Reporting — the plot.ly / dashboard tier as a library.
+
+Generates the paper's figures from the result store as text/CSV/markdown
+artifacts: training time vs hidden layers (Fig 5), queue dashboard (Fig 6),
+worker status (Fig 7), plus the accuracy-vs-capacity table behind finding
+F1 and the activation comparison behind F3. ASCII scatter plots keep the
+"visualization" promise in a terminal-only container.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.results import ResultStore
+
+
+# ----------------------------------------------------------------- extraction
+
+def time_vs_layers(results: ResultStore, session_id=None) -> List[Tuple[int, float]]:
+    """(n_hidden_layers, mean train_time) rows — paper Fig 5."""
+    groups = results.aggregate("metrics.n_hidden_layers", "train_time",
+                               session_id)
+    return sorted((int(k), float(np.mean(v))) for k, v in groups.items())
+
+
+def accuracy_vs_capacity(results: ResultStore, session_id=None,
+                         key="metrics.n_params") -> List[Tuple[int, float]]:
+    """(capacity, mean test accuracy) — the critical-mass curve (F1)."""
+    groups = results.aggregate(key, "metrics.accuracy", session_id)
+    return sorted((int(k), float(np.mean(v))) for k, v in groups.items())
+
+
+def accuracy_by_activation(results: ResultStore, session_id=None) -> Dict[str, float]:
+    """mean accuracy per activation cycle (F3)."""
+    out: Dict[str, List[float]] = {}
+    for d in results.find(session_id, status="ok"):
+        acts = "+".join(d["params"].get("activations", []))
+        acc = d["metrics"].get("accuracy")
+        if acc is not None:
+            out.setdefault(acts, []).append(acc)
+    return {k: float(np.mean(v)) for k, v in sorted(out.items())}
+
+
+def failure_report(results: ResultStore, session_id=None) -> dict:
+    ok = results.count(session_id, status="ok")
+    failed = results.count(session_id, status="failed")
+    return {"ok": ok, "failed": failed,
+            "fail_forward_rate": failed / max(ok + failed, 1)}
+
+
+# ----------------------------------------------------------------- rendering
+
+def ascii_scatter(rows: Sequence[Tuple[float, float]], *, width=60, height=16,
+                  xlabel="x", ylabel="y", logx=False) -> str:
+    if not rows:
+        return "(no data)"
+    xs = np.array([r[0] for r in rows], float)
+    ys = np.array([r[1] for r in rows], float)
+    if logx:
+        xs = np.log10(np.maximum(xs, 1e-12))
+    x0, x1 = float(xs.min()), float(xs.max())
+    y0, y1 = float(ys.min()), float(ys.max())
+    x1 = x1 if x1 > x0 else x0 + 1
+    y1 = y1 if y1 > y0 else y0 + 1
+    grid = [[" "] * width for _ in range(height)]
+    for x, y in zip(xs, ys):
+        c = int((x - x0) / (x1 - x0) * (width - 1))
+        r = int((y - y0) / (y1 - y0) * (height - 1))
+        grid[height - 1 - r][c] = "*"
+    lines = ["".join(row) for row in grid]
+    header = f"{ylabel} [{y0:.4g} .. {y1:.4g}]   {xlabel}" + \
+        (" (log10)" if logx else "") + f" [{x0:.4g} .. {x1:.4g}]"
+    return header + "\n" + "\n".join("|" + ln for ln in lines) + \
+        "\n+" + "-" * width
+
+
+def to_csv(rows: Sequence[Tuple], header: Sequence[str]) -> str:
+    out = [",".join(header)]
+    out += [",".join(str(c) for c in r) for r in rows]
+    return "\n".join(out)
+
+
+def to_markdown(rows: Sequence[Tuple], header: Sequence[str]) -> str:
+    out = ["| " + " | ".join(header) + " |",
+           "|" + "|".join("---" for _ in header) + "|"]
+    out += ["| " + " | ".join(str(c) for c in r) + " |" for r in rows]
+    return "\n".join(out)
+
+
+def linear_fit(rows: Sequence[Tuple[float, float]]) -> dict:
+    """Least-squares fit + R^2 — used to validate finding F2 (time grows
+    ~linearly with layer count)."""
+    xs = np.array([r[0] for r in rows], float)
+    ys = np.array([r[1] for r in rows], float)
+    if len(xs) < 2:
+        return {"slope": 0.0, "intercept": float(ys.mean()) if len(ys) else 0.0,
+                "r2": 1.0}
+    A = np.stack([xs, np.ones_like(xs)], axis=1)
+    (slope, intercept), *_ = np.linalg.lstsq(A, ys, rcond=None)
+    pred = slope * xs + intercept
+    ss_res = float(np.sum((ys - pred) ** 2))
+    ss_tot = float(np.sum((ys - ys.mean()) ** 2)) or 1e-12
+    return {"slope": float(slope), "intercept": float(intercept),
+            "r2": 1 - ss_res / ss_tot}
+
+
+def critical_mass(rows: Sequence[Tuple[int, float]], *, tol=0.01) -> Optional[int]:
+    """Smallest capacity whose accuracy is within `tol` of the best mean
+    accuracy at any larger capacity — the paper's F1 'critical mass' point."""
+    if not rows:
+        return None
+    best = max(a for _, a in rows)
+    for cap, acc in rows:
+        if acc >= best - tol:
+            return cap
+    return rows[-1][0]

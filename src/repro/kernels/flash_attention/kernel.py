@@ -1,0 +1,128 @@
+"""Flash attention Pallas TPU kernel (GQA, causal/sliding-window).
+
+Tiling: grid = (batch, q_heads, Sq/block_q, Sk/block_k); the K-block axis is
+innermost, so the VMEM scratch accumulators (acc, row-max m, row-sum l)
+persist across K iterations — the online-softmax recurrence. Block shapes
+are MXU-aligned (block_q x head_dim and block_k x head_dim tiles; head_dim
+is a multiple of 64/128 for every assigned arch). GQA maps query head h to
+KV head h // (n_heads // n_kv_heads) in the BlockSpec index_map, so KV
+blocks are fetched once per KV-head group without materializing the repeat.
+
+Fully-masked K blocks (beyond the causal frontier or outside the sliding
+window) are skipped with @pl.when — the grid still visits them but does no
+FLOPs and no VMEM writes.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale: float, causal: bool, window, block_q: int,
+                 block_k: int, n_kblocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    # Block-level skip: does any (i, j) pair in this tile attend?
+    visible = jnp.bool_(True)
+    if causal:
+        visible = jnp.logical_and(visible,
+                                  k_start <= q_start + block_q - 1)
+    if window is not None:
+        visible = jnp.logical_and(
+            visible, k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                                    # (bq,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_cur[:, None]), 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        o_ref[0, 0] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal=True, window=None,
+                           scale=None, block_q=128, block_k=128,
+                           interpret=False):
+    """q: (B, Sq, nh, hd); k, v: (B, Sk, nkv, hd). Returns (B, Sq, nh, hd)."""
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    rep = nh // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    n_kblocks = Sk // block_k
+
+    # (B, S, h, d) -> (B, h, S, d): head-major so a block is one VMEM tile
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    kern = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_kblocks=n_kblocks)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, nh, Sq // block_q, n_kblocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, iq, ik: (b, h // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nh, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for flash attention: exact masked softmax attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Sq, nh, hd); k, v: (B, Sk, nkv, hd) -> (B, Sq, nh, hd)."""
+    B, Sq, nh, hd = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    rep = nh // nkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kf = jnp.repeat(k, rep, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kf) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)   # fully-masked rows -> zero output
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Oracle for the RG-LRU scan: sequential lax.scan recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(a, b):
+    """a, b: (B, S, C) -> y (B, S, C) f32; y_t = a_t*y_{t-1} + b_t."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a32 = jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+    b32 = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    h0 = jnp.zeros(a.shape[::2], jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (a32, b32))
+    return jnp.moveaxis(ys, 0, 1)

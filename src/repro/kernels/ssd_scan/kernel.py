@@ -1,0 +1,95 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel [arXiv:2405.21060].
+
+The CUDA SSD kernel tiles over (chunk, head) thread-blocks with the running
+state in shared memory; the TPU adaptation makes the chunk axis the
+innermost (sequential) grid dimension so the running state lives in a VMEM
+scratch accumulator across chunk iterations, and expresses both the
+intra-chunk quadratic term and the state update as (chunk x N) @ (N x P)
+matmuls for the MXU. Grid = (batch*heads, n_chunks).
+
+Inputs are pre-arranged head-major: xdt (BH, S, P) [x already scaled by
+dt], a (BH, S) [log decay dt*A], B, C (BH, S, N) [group-broadcast].
+Outputs: y (BH, S, P) and the final state (BH, P, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)            # (q, P)
+    a = a_ref[0].astype(jnp.float32)                # (q,)
+    B = b_ref[0].astype(jnp.float32)                # (q, N)
+    C = c_ref[0].astype(jnp.float32)                # (q, N)
+
+    acs = jnp.cumsum(a)                             # inclusive (q,)
+    # intra-chunk: scores[i,j] = C_i.B_j * exp(acs_i - acs_j), i >= j
+    seg = acs[:, None] - acs[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * L
+    y = jax.lax.dot_general(scores, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # carried-state contribution: (C * exp(acs)) @ state^T : (q,N)@(N,P)
+    state = state_ref[...]                          # (P, N)
+    y += jax.lax.dot_general(C * jnp.exp(acs)[:, None], state,
+                             (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S' = exp(acs_last)*S + sum_j exp(acs_last-acs_j) xdt_j B_j^T
+    decay_j = jnp.exp(acs[-1] - acs)                # (q,)
+    upd = jax.lax.dot_general(xdt * decay_j[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = jnp.exp(acs[-1]) * state + upd
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0] = state_ref[...]
+
+
+def ssd_scan_kernel(xdt, a, B, C, *, chunk: int, interpret=False):
+    """xdt: (BH, S, P); a: (BH, S); B, C: (BH, S, N).
+    Returns (y (BH, S, P) f32, state (BH, P, N) f32)."""
+    BH, S, P = xdt.shape
+    N = B.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    kern = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, ic: (bh, ic)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh, ic: (bh, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xdt, a, B, C)
+    return y, state

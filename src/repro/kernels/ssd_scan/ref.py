@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD scan: the naive sequential recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t ;   y_t = C_t . h_t
+computed step by step with lax.scan (no chunking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, B, C):
+    """x: (b,s,h,p); dt: (b,s,h); A: (h,); B, C: (b,s,g,n).
+    Returns (y (b,s,h,p) f32, final state (b,h,p,n) f32)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(hstate, inputs):
+        xt, dtt, Bt, Ct = inputs                       # (b,h,p), (b,h), ...
+        decay = jnp.exp(dtt * A[None, :])              # (b,h)
+        upd = (dtt[..., None] * xt)[..., None] * Bt[:, :, None, :]
+        hstate = decay[:, :, None, None] * hstate + upd
+        y = jnp.einsum("bhpn,bhn->bhp", hstate, Ct)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_fin

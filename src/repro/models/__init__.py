@@ -1,0 +1,1 @@
+from repro.models import layers, transformer, moe, mamba2, rglru, dnn  # noqa: F401

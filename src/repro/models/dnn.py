@@ -1,0 +1,50 @@
+"""The paper's own model family: tabular MLP classifiers.
+
+This is the network the 2015 framework sweeps (PyBrain/Keras "Dense" stacks
+over CSV features). Hidden sizes and the per-layer activation cycle are the
+swept design dimensions (paper findings F1 and F3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLPConfig
+from repro.models.layers import ACTIVATIONS, dense_init
+
+
+def init_dnn(key, cfg: MLPConfig):
+    sizes = (cfg.n_features,) + tuple(cfg.hidden_sizes) + (cfg.n_classes,)
+    ks = jax.random.split(key, len(sizes) - 1)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "layers": tuple(
+            {"w": dense_init(ks[i], sizes[i], sizes[i + 1], pdt),
+             "b": jnp.zeros((sizes[i + 1],), pdt)}
+            for i in range(len(sizes) - 1)),
+    }
+
+
+def forward_dnn(params, cfg: MLPConfig, x, *, train: bool = False, key=None):
+    """x: (B, n_features) -> logits (B, n_classes)."""
+    n = len(params["layers"])
+    for i, lp in enumerate(params["layers"]):
+        x = x @ lp["w"] + lp["b"]
+        if i < n - 1:
+            act = cfg.activations[i % len(cfg.activations)]
+            x = ACTIVATIONS[act](x)
+            if train and cfg.dropout > 0 and key is not None:
+                key = jax.random.fold_in(key, i)
+                keep = jax.random.bernoulli(key, 1 - cfg.dropout, x.shape)
+                x = jnp.where(keep, x / (1 - cfg.dropout), 0)
+    return x
+
+
+def dnn_loss(params, cfg: MLPConfig, batch, key=None):
+    """Softmax cross-entropy on one-hot labels. batch: {"x": (B,F), "y": (B,C)}."""
+    logits = forward_dnn(params, cfg, batch["x"], train=key is not None, key=key)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.mean(jnp.sum(batch["y"] * logp, axis=-1))
+    acc = jnp.mean((jnp.argmax(logits, -1) == jnp.argmax(batch["y"], -1))
+                   .astype(jnp.float32))
+    return loss, {"accuracy": acc}

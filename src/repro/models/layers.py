@@ -1,0 +1,256 @@
+"""Core composable layers: norms, RoPE, GQA attention (train/prefill/decode),
+gated MLPs. Pure functions over parameter pytrees (dicts of jnp arrays) —
+no framework dependency, so the sweep engine can stack/vmap params freely.
+
+Attention supports:
+  * grouped-query (n_kv_heads <= n_heads)
+  * optional per-head RMS qk-norm (qwen3)
+  * causal, sliding-window and cross (non-causal) masking
+  * decode against a (possibly ring-buffered) KV cache
+  * impl = "xla" (einsum; what the dry-run lowers) or "pallas"
+    (kernels/flash_attention; interpret-mode on CPU)
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ----------------------------------------------------------------------------- init
+
+def uniform_init(key, shape, scale, dtype):
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return uniform_init(key, (d_in, d_out), scale, dtype)
+
+
+# ----------------------------------------------------------------------------- norms
+
+def rms_norm(x, weight, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}  # stored as (1 + scale)
+
+
+def apply_rms_norm(params, x, eps=1e-6):
+    return rms_norm(x, params["scale"], eps)
+
+
+# ----------------------------------------------------------------------------- acts
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "swish": jax.nn.silu,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "identity": lambda x: x,
+}
+
+
+# ----------------------------------------------------------------------------- rope
+
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, hd/2)
+    ang = ang[..., None, :]                                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------- attention
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    pdt = cfg.parameter_dtype
+    p = {
+        "wq": dense_init(ks[0], d, nh * hd, pdt),
+        "wk": dense_init(ks[1], d, nkv * hd, pdt),
+        "wv": dense_init(ks[2], d, nkv * hd, pdt),
+        "wo": dense_init(ks[3], nh * hd, d, pdt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(hd, pdt)
+        p["k_norm"] = init_rms_norm(hd, pdt)
+    return p
+
+
+def _attn_mask(q_pos, k_pos, causal: bool, window: Optional[int]):
+    """Boolean mask (..., Sq, Sk): True = attend."""
+    m = jnp.ones(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]), bool)
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    return m
+
+
+def _sdpa_xla(q, k, v, mask, scale):
+    """q:(B,Sq,nh,hd) k,v:(B,Sk,nkv,hd). GQA by reshaping q to (nkv, rep).
+
+    Inputs stay in their storage dtype (bf16 on TPU) with f32 MXU
+    accumulation (preferred_element_type) — casting inputs up to f32 doubled
+    every backward-pass collective payload (§Perf iteration 2). Softmax is
+    computed in f32; probabilities are cast back before the PV matmul.
+    """
+    B, Sq, nh, hd = q.shape
+    nkv = k.shape[2]
+    rep = nh // nkv
+    qr = q.reshape(B, Sq, nkv, rep, hd)
+    logits = jnp.einsum("bqkrh,bskh->bkrqs", qr, k,
+                        preferred_element_type=jnp.float32) * scale
+    neg = jnp.finfo(jnp.float32).min
+    logits = jnp.where(mask[:, None, None, :, :], logits, neg)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrqs,bskh->bqkrh", w.astype(q.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, nh, hd).astype(q.dtype)
+
+
+def attention(params, cfg, x, positions, *, kv=None, kv_positions=None,
+              causal=True, window=None, rope=True, constrain_kv=False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    x: (B, S, d). kv: optional (B, Sk, d) source for cross-attention.
+    Returns (out, (k, v)) so prefill can populate a cache. With
+    ``constrain_kv`` the emitted k/v are constrained to the prefill-cache
+    layout (head_dim over "model") so the cache write needs no reshard
+    (§Perf iteration 1 — the naive seq-sharded cache spec made XLA
+    replicate-then-slice every layer's k/v).
+    """
+    from repro.sharding.rules import constrain
+    B, S, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    src = x if kv is None else kv
+    kv_positions = positions if kv_positions is None else kv_positions
+    q = (x @ params["wq"]).reshape(B, S, nh, hd)
+    k = (src @ params["wk"]).reshape(B, src.shape[1], nkv, hd)
+    v = (src @ params["wv"]).reshape(B, src.shape[1], nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    if constrain_kv:
+        k = constrain(k, ("batch", None, None, "model"))
+        v = constrain(v, ("batch", None, None, "model"))
+    scale = 1.0 / math.sqrt(hd)
+    if cfg.attention_impl == "pallas" and kv is None and causal:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                     interpret=True)
+    else:
+        mask = _attn_mask(jnp.broadcast_to(positions, (B, S)),
+                          jnp.broadcast_to(kv_positions, (B, src.shape[1])),
+                          causal, window)
+        out = _sdpa_xla(q, k, v, mask, scale)
+    return out.reshape(B, S, nh * hd) @ params["wo"], (k, v)
+
+
+def attention_decode(params, cfg, x, pos, cache_k, cache_v, cache_pos, *,
+                     window=None, rope=True, cross=False):
+    """Single-token decode. x: (B, 1, d); cache_{k,v}: (B, Sc, nkv, hd);
+    cache_pos: (B, Sc) int32 positions held in each cache slot (-1 = empty).
+    Returns (out, new_k_cache, new_v_cache, new_cache_pos).
+
+    For ring-buffer (windowed) caches the write slot is pos % Sc; for full
+    caches Sc >= max_seq and slot = pos. Cross-attention reads the cache only.
+    """
+    B, _, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    Sc = cache_k.shape[1]
+    q = (x @ params["wq"]).reshape(B, 1, nh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    if not cross:
+        k_new = (x @ params["wk"]).reshape(B, 1, nkv, hd)
+        v_new = (x @ params["wv"]).reshape(B, 1, nkv, hd)
+        if cfg.qk_norm:
+            k_new = rms_norm(k_new, params["k_norm"]["scale"], cfg.norm_eps)
+        if rope:
+            k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+        slot = pos % Sc
+        oh = jax.nn.one_hot(slot, Sc, dtype=cache_k.dtype)           # (B, Sc)
+        cache_k = cache_k * (1 - oh)[:, :, None, None] + oh[:, :, None, None] * k_new
+        cache_v = cache_v * (1 - oh)[:, :, None, None] + oh[:, :, None, None] * v_new
+        cache_pos = jnp.where(jnp.arange(Sc)[None] == slot[:, None],
+                              pos[:, None], cache_pos)
+    valid = cache_pos >= 0
+    if not cross:
+        valid &= cache_pos <= pos[:, None]
+        if window is not None:
+            valid &= cache_pos > (pos[:, None] - window)
+    scale = 1.0 / math.sqrt(hd)
+    rep = nh // nkv
+    qr = q.reshape(B, nkv, rep, hd)
+    logits = jnp.einsum("bkrh,bskh->bkrs", qr.astype(jnp.float32),
+                        cache_k.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bskh->bkrh", w, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, nh * hd).astype(x.dtype) @ params["wo"]
+    return out, cache_k, cache_v, cache_pos
+
+
+# ----------------------------------------------------------------------------- mlp
+
+def init_mlp(key, d_model, d_ff, dtype, gated=True):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[0], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x, act="silu"):
+    a = ACTIVATIONS[act]
+    if "w_gate" in params:        # SwiGLU-style
+        return (a(x @ params["w_gate"]) * (x @ params["w_up"])) @ params["w_down"]
+    return a(x @ params["w_up"]) @ params["w_down"]
+
+
+# ----------------------------------------------------------------------------- embed
+
+def init_embedding(key, vocab, d, dtype):
+    return {"table": jax.random.normal(key, (vocab, d), dtype) * 0.02}
+
+
+def embed(params, tokens, scale=None):
+    e = params["table"][tokens]
+    if scale is not None:
+        e = e * scale
+    return e
+
+
+def unembed(params, x, table=None):
+    t = table if table is not None else params["table"]
+    return x @ t.T

@@ -1,0 +1,113 @@
+"""Token-choice top-k Mixture-of-Experts FFN (granite-3.0 style).
+
+Dispatch is GShard-grouped and scatter-based:
+
+* Grouping — each *sequence* is a dispatch group (G = batch). Capacity is
+  per group (C = ceil(S * top_k * capacity_factor / E)), so the expert
+  buffer is (G, E, C, d) with the G axis sharded over the data axes: tokens
+  never leave their data shard at dispatch. The classic ungrouped
+  formulation needs a global-token-capacity buffer that replicates when E
+  doesn't divide the model axis (granite-3b: 40 experts on a 16-way axis).
+
+* Scatter, not one-hot einsum — the (tokens, E, C) one-hot tensors of the
+  GShard einsum formulation are O(T*E*C) and blow memory at top-8-of-40;
+  a scatter-add moves exactly the dispatched activations.
+
+Expert weights: expert-parallel over the model axis when E divides it
+(granite-1b: 32/16), else expert-internal tensor parallelism on the
+per-expert d_ff (granite-3b: 40e, d_ff 512 -> 32/shard) — rule engine,
+sharding/rules.py.
+
+Aux losses follow Switch/GShard: load-balance = E * sum_e f_e * p_e and the
+router z-loss; both are returned for the trainer to weight (cfg.moe.*_coef).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTIVATIONS, dense_init
+from repro.sharding.rules import constrain
+
+
+def init_moe(key, cfg):
+    m = cfg.moe
+    d, ff = cfg.d_model, m.expert_d_ff
+    E, Ep = m.n_experts, m.padded_n_experts
+    ks = jax.random.split(key, 4)
+    pdt = cfg.parameter_dtype
+    # router stays at the real expert count; weights are padded (dead
+    # experts get zero-init rows and are never routed to — §Perf-5).
+    return {
+        "router": dense_init(ks[0], d, E, pdt, scale=0.02),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, ff, pdt))(jax.random.split(ks[1], Ep)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, ff, pdt))(jax.random.split(ks[2], Ep)),
+        "w_down": jax.vmap(lambda k: dense_init(k, ff, d, pdt))(jax.random.split(ks[3], Ep)),
+    }
+
+
+def _dispatch_group(xg, logits_g, E: int, K: int, C: int, dtype):
+    """Per-group dispatch. xg: (S, d); logits_g: (S, E).
+    Returns (buf (E, C, d), combine info)."""
+    S, d = xg.shape
+    gate_vals, idx = jax.lax.top_k(logits_g, K)                      # (S, K)
+    weights = jax.nn.softmax(gate_vals, axis=-1).astype(dtype)
+    flat_e = idx.reshape(S * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (S*K, E)
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1  # slot
+    keep = pos < C
+    safe_pos = jnp.where(keep, pos, 0)
+    tok_idx = jnp.arange(S * K) // K
+    src = jnp.where(keep[:, None], xg[tok_idx], 0)
+    buf = jnp.zeros((E, C, d), dtype).at[flat_e, safe_pos].add(src)
+    return buf, (flat_e, safe_pos, keep, weights)
+
+
+def _combine_group(out_buf, info, S: int, K: int):
+    flat_e, safe_pos, keep, weights = info
+    gathered = out_buf[flat_e, safe_pos]                             # (S*K, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    d = gathered.shape[-1]
+    return jnp.sum((gathered * weights.reshape(S * K, 1))
+                   .reshape(S, K, d), axis=1)
+
+
+def moe_ffn(params, cfg, x):
+    """x: (B, S, d) -> (out, aux). One dispatch group per sequence."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    Ep = m.padded_n_experts            # buffer width (dead experts unused)
+    C = int(max(K, round(S * K * m.capacity_factor / E)))
+
+    logits = (x @ params["router"]).astype(jnp.float32)              # (B, S, E)
+
+    # --- aux losses (global router distribution) ---
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx_all = jax.lax.top_k(logits, K)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(idx_all, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1)) / K
+    load_balance = E * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # --- grouped dispatch (vmapped over the batch/group axis) ---
+    buf, info = jax.vmap(
+        lambda xg, lg: _dispatch_group(xg, lg, Ep, K, C, x.dtype))(x, logits)
+    buf = constrain(buf, ("batch", "model", None, None))             # (B,E,C,d)
+
+    # --- expert computation: (B, E, C, d) x (E, d, ff) ---
+    act = ACTIVATIONS[cfg.act]
+    h = act(jnp.einsum("becd,edf->becf", buf, params["w_gate"])) * \
+        jnp.einsum("becd,edf->becf", buf, params["w_up"])
+    out_buf = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    out_buf = constrain(out_buf, ("batch", "model", None, None))
+
+    # --- combine ---
+    out = jax.vmap(lambda ob, inf: _combine_group(ob, inf, S, K))(out_buf, info)
+
+    keep_frac = jnp.mean(info[2].astype(jnp.float32))
+    aux = {"load_balance": load_balance.astype(jnp.float32),
+           "router_z": z_loss.astype(jnp.float32),
+           "dropped_frac": 1.0 - keep_frac}
+    return out, aux

@@ -1,0 +1,3 @@
+from repro.optim.adamw import adamw  # noqa: F401
+from repro.optim.sgd import sgd  # noqa: F401
+from repro.optim import schedules  # noqa: F401

@@ -1,0 +1,65 @@
+"""AdamW with decoupled weight decay and global-norm clipping (from scratch;
+no optax in this container). API mirrors the optax (init, update) pair so
+the trainer is optimizer-agnostic.
+
+Optimizer state moments are kept in float32 regardless of param dtype
+(mixed-precision master-state convention).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: dict
+    nu: dict
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
+          weight_decay=0.1, clip_norm: Optional[float] = 1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gnorm = global_norm(grads)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu), {"grad_norm": gnorm,
+                                                      "lr": lr_t}
+
+    return init, update

@@ -1,0 +1,29 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac) * 0.5 *
+                      (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def inverse_sqrt(peak: float, warmup_steps: int):
+    def fn(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return peak * jnp.minimum(step / max(warmup_steps, 1),
+                                  jnp.sqrt(warmup_steps / step))
+    return fn

@@ -1,0 +1,39 @@
+"""SGD with optional momentum — the PyBrain-side baseline optimizer of the
+paper's dual-backend comparison."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    step: jnp.ndarray
+    velocity: dict
+
+
+def sgd(lr: Callable | float, *, momentum=0.9, nesterov=False):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return SGDState(step=jnp.zeros((), jnp.int32),
+                        velocity=jax.tree.map(
+                            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                           state.velocity, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda g, v: g.astype(jnp.float32) + momentum * v,
+                               grads, vel)
+        else:
+            upd = vel
+        new_params = jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) - lr_t * u).astype(p.dtype),
+            params, upd)
+        return new_params, SGDState(step, vel), {"lr": lr_t}
+
+    return init, update

@@ -1,0 +1,1 @@
+from repro.serve import engine, step  # noqa: F401

@@ -1,0 +1,186 @@
+"""Batched serving engine: fixed-slot continuous batching.
+
+A `ServeEngine` owns a decode cache with `batch_slots` sequences. Requests
+(prompt token lists) are admitted into free slots, prefilled, then all
+active slots decode in lockstep with one jitted `decode_step` per token.
+Finished sequences (EOS or max_new_tokens) free their slot, and waiting
+requests are admitted — continuous batching. This is the paper's "task
+execution" stage re-shaped for inference: the slot pool is the worker pool,
+admission is the queue pull, and a finished request "fails forward" without
+disturbing its batch peers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.serve.step import build_decode
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg, *, batch_slots: int = 4,
+                 cache_len: int = 256, window=None,
+                 prefill_mode: str = "decode"):
+        """prefill_mode: "decode" feeds prompt tokens one at a time through
+        decode_step (simple, exact); "bulk" runs the full-sequence prefill
+        kernel once per request and copies the natural-length caches into
+        the slot (one jit'd forward instead of len(prompt) decode steps —
+        the production path, one compile per prompt length)."""
+        self.params = params
+        self.cfg = cfg
+        self.slots = batch_slots
+        self.cache_len = cache_len
+        self.cache = T.init_cache(cfg, batch_slots, cache_len)
+        self.pos = np.full((batch_slots,), -1, np.int64)   # last written pos
+        self.budget = np.zeros((batch_slots,), np.int64)
+        self.active: List[Optional[Request]] = [None] * batch_slots
+        self._decode = jax.jit(build_decode(cfg, window=window))
+        self.prefill_mode = prefill_mode
+        if prefill_mode == "bulk":
+            from repro.serve.step import build_prefill
+            self._prefill = jax.jit(build_prefill(cfg, window=window))
+        self._pending: List[Request] = []
+        self._all: List[Request] = []
+        self._next_id = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: List[int], max_new_tokens: int = 16,
+               eos_id: Optional[int] = None) -> Request:
+        req = Request(self._next_id, list(prompt), max_new_tokens, eos_id)
+        self._next_id += 1
+        self._pending.append(req)
+        self._all.append(req)
+        return req
+
+    # ------------------------------------------------------------- internals
+    def _admit(self):
+        for slot in range(self.slots):
+            if self.active[slot] is None and self._pending:
+                req = self._pending.pop(0)
+                self.active[slot] = req
+                self._prefill_slot(slot, req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Fill this slot's cache from the prompt, merging only this slot's
+        rows so peers are untouched."""
+        if self.prefill_mode == "bulk":
+            last = self._bulk_prefill_slot(slot, req)
+        else:
+            last = 0
+            for t, tok in enumerate(req.prompt):
+                toks = jnp.zeros((self.slots, 1), jnp.int32) \
+                    .at[slot, 0].set(tok)
+                pos = jnp.zeros((self.slots,), jnp.int32).at[slot].set(t)
+                nxt, cache = self._decode(self.params, toks, pos, self.cache)
+                self.cache = _merge_slot(self.cache, cache, slot)
+                last = int(nxt[slot])
+        self.pos[slot] = len(req.prompt) - 1
+        req.output.append(last)               # first token comes from prefill
+        self.budget[slot] = req.max_new_tokens - 1
+        if self.budget[slot] <= 0:
+            self._retire(slot)
+
+    def _bulk_prefill_slot(self, slot: int, req: Request) -> int:
+        """One full-sequence prefill forward; natural-length caches are
+        copied into this slot of the fixed decode cache."""
+        from repro.serve.step import prefill_into_cache
+        toks = jnp.asarray([req.prompt], jnp.int32)             # (1, Sp)
+        nxt, nat = self._prefill(self.params, {"tokens": toks})
+        slot_cache = T.init_cache(self.cfg, 1, self.cache_len)
+        slot_cache = prefill_into_cache(self.cfg, nat, slot_cache,
+                                        jnp.asarray([len(req.prompt)]))
+
+        # write the single-row cache into this slot (batch axis: 0 for tail
+        # leaves, 1 for block-stacked leaves)
+        def write(full, one, axis):
+            idx = [slice(None)] * full.ndim
+            idx[axis] = slice(slot, slot + 1)
+            return full.at[tuple(idx)].set(one)
+        merged = {"blocks": None}
+        if self.cache.get("blocks") is not None:
+            merged["blocks"] = jax.tree.map(
+                lambda f, o: write(f, o, 1), self.cache["blocks"],
+                slot_cache["blocks"])
+        merged["tail"] = jax.tree.map(lambda f, o: write(f, o, 0),
+                                      self.cache["tail"], slot_cache["tail"])
+        self.cache = merged
+        return int(nxt[0])
+
+    def _retire(self, slot: int):
+        self.active[slot].done = True
+        self.active[slot] = None
+        self.pos[slot] = -1
+
+    # ------------------------------------------------------------- run
+    def step(self) -> int:
+        """Admit + one lockstep decode over active slots. Returns #active."""
+        self._admit()
+        live = [s for s in range(self.slots) if self.active[s] is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in live:
+            toks[s, 0] = self.active[s].output[-1]
+        pos = np.maximum(self.pos + 1, 0).astype(np.int32)
+        nxt, new_cache = self._decode(self.params, jnp.asarray(toks),
+                                      jnp.asarray(pos), self.cache)
+        self.cache = _merge_slots(self.cache, new_cache, live)
+        nxt = np.asarray(nxt)
+        for s in live:
+            req = self.active[s]
+            self.pos[s] += 1
+            self.budget[s] -= 1
+            tok = int(nxt[s])
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if not hit_eos:
+                req.output.append(tok)
+            if hit_eos or self.budget[s] <= 0:
+                self._retire(s)
+        return len(live)
+
+    def run(self) -> List[Request]:
+        while self._pending or any(a is not None for a in self.active):
+            self.step()
+        return [r for r in self._all if r.done]
+
+
+def _take_rows(o, n, slots, axis):
+    idx = [slice(None)] * o.ndim
+    sel = np.zeros(o.shape[axis], bool)
+    sel[list(slots)] = True
+    reshape = [1] * o.ndim
+    reshape[axis] = o.shape[axis]
+    mask = jnp.asarray(sel).reshape(reshape)
+    return jnp.where(mask, n, o)
+
+
+def _merge_slots(old_cache, new_cache, slots):
+    """Take rows in `slots` from new_cache, keep the rest from old_cache.
+    Batch axis is 0 for tail leaves, 1 for block-stacked leaves."""
+    merged = {"blocks": None}
+    if old_cache.get("blocks") is not None:
+        merged["blocks"] = jax.tree.map(
+            lambda o, n: _take_rows(o, n, slots, 1),
+            old_cache["blocks"], new_cache["blocks"])
+    merged["tail"] = jax.tree.map(lambda o, n: _take_rows(o, n, slots, 0),
+                                  old_cache["tail"], new_cache["tail"])
+    return merged
+
+
+def _merge_slot(old_cache, new_cache, slot: int):
+    return _merge_slots(old_cache, new_cache, [slot])

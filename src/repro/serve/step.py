@@ -1,0 +1,79 @@
+"""Serving step builders: prefill (cache write) and single-token decode.
+
+These are the functions the decode_* input shapes lower in the dry-run:
+``serve_prefill`` for prefill_32k and ``serve_decode`` for decode_32k /
+long_500k (one new token against a seq_len-sized KV state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+def build_prefill(cfg, *, window=None):
+    def prefill(params, batch):
+        logits, caches = T.forward_prefill(params, cfg, batch, window=window)
+        # greedy next token from the last position
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, caches
+    return prefill
+
+
+def build_decode(cfg, *, window=None):
+    def decode(params, tokens, pos, cache):
+        logits, cache = T.decode_step(params, cfg, tokens, pos, cache,
+                                      window=window)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode
+
+
+def prefill_into_cache(cfg, caches, cache, prompt_lens):
+    """Copy natural-length prefill caches into the fixed-size decode cache.
+
+    caches: output of forward_prefill (k/v at prompt length S_p).
+    cache: zero-initialized decode cache (length >= S_p, or ring for window).
+    Attention entries are placed at slot = pos % cache_len so both linear and
+    ring caches are handled by one rule. SSM/RG-LRU states copy directly.
+    """
+    def copy_layer(dst, src):
+        if "k" in dst:   # attention
+            Sc = dst["k"].shape[1]
+            Sp = src["k"].shape[1]
+            pos = src["pos"]                         # (B, Sp)
+            take = min(Sc, Sp)
+            # last `take` entries (ring semantics for window caches)
+            ksrc, vsrc, psrc = (a[:, -take:] for a in
+                                (src["k"], src["v"], src["pos"]))
+            slots = psrc % Sc                        # (B, take)
+            bidx = jnp.arange(ksrc.shape[0])[:, None]
+            new = dict(dst)
+            new["k"] = dst["k"].at[bidx, slots].set(ksrc)
+            new["v"] = dst["v"].at[bidx, slots].set(vsrc)
+            new["pos"] = dst["pos"].at[bidx, slots].set(psrc)
+            for ck in ("cross_k", "cross_v"):
+                if ck in src:
+                    new[ck] = src[ck]
+            if "cross_k" in src:
+                new["cross_pos"] = jnp.broadcast_to(
+                    jnp.arange(src["cross_k"].shape[1])[None],
+                    src["cross_k"].shape[:2]).astype(jnp.int32)
+            return new
+        return src  # ssm / rglru states already final
+
+    def rec(dst, src):
+        if isinstance(dst, dict) and ("k" in dst or "ssm" in dst or "h" in dst):
+            if "k" in dst and dst["k"].ndim == 5:     # stacked over n_blocks
+                return jax.vmap(copy_layer)(dst, src)
+            return copy_layer(dst, src)
+        if isinstance(dst, dict):
+            return {k: rec(dst[k], src[k]) for k in dst}
+        if isinstance(dst, (tuple, list)):
+            return type(dst)(rec(d, s) for d, s in zip(dst, src))
+        return src
+
+    return rec(cache, caches)

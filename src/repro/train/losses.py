@@ -1,0 +1,45 @@
+"""Loss functions for the LM zoo and the paper's tabular MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits, labels, mask=None, label_smoothing: float = 0.0):
+    """logits: (..., V) ; labels: (...) int32 ; mask: (...) optional {0,1}.
+
+    The label log-prob is extracted with a masked SUM over the vocab axis,
+    not take_along_axis: a gather along a sharded axis makes GSPMD
+    all-gather the full f32 logits (3 x 34 GB/device at 131k vocab on the
+    production mesh — §Perf iteration 3), while an elementwise mask + sum
+    is computed shard-locally with one tiny (B,S) all-reduce. logsumexp
+    partitions the same way. f32 throughout for stability."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),
+                 axis=-1)
+    nll = lse - ll
+    if label_smoothing > 0:
+        mean_logit = jnp.mean(logits, axis=-1)
+        # uniform-smoothing cross-entropy (constant -ls*log(V) term dropped)
+        nll = (1 - label_smoothing) * nll + label_smoothing * (lse - mean_logit)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        return jnp.sum(nll * mask) / denom
+    return jnp.mean(nll)
+
+
+def lm_loss(params, cfg, batch, forward_fn, *, window=None):
+    """Cross-entropy + MoE aux. Returns (loss, metrics)."""
+    logits, aux = forward_fn(params, cfg, batch, window=window)
+    xent = softmax_xent(logits, batch["labels"], batch.get("mask"))
+    loss = xent
+    if cfg.moe:
+        loss = loss + cfg.moe.load_balance_coef * aux["load_balance"] \
+                    + cfg.moe.router_z_coef * aux["router_z"]
+    metrics = {"xent": xent, "loss": loss}
+    metrics.update({k: v for k, v in aux.items()})
+    return loss, metrics

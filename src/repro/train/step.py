@@ -1,0 +1,74 @@
+"""Train-step builders: fwd+bwd+update, with optional microbatch gradient
+accumulation (lax.scan over microbatches so HLO stays compact)."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.train.losses import lm_loss
+
+
+def build_lm_train_step(cfg, opt_update: Callable, *, microbatches: int = 1,
+                        window=None, forward_fn=None):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``batch`` leaves have leading dim = global (per-process) batch; with
+    microbatches > 1 the batch is reshaped to (k, b/k, ...) and gradients are
+    accumulated in f32 across a scan — the activation-memory lever the perf
+    loop adjusts.
+    """
+    fwd = forward_fn or T.forward_train
+
+    def loss_fn(params, mb):
+        return lm_loss(params, cfg, mb, fwd, window=window)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def resh(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree.map(resh, batch)
+
+            def accum(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"xent": jnp.zeros((), jnp.float32),
+                  "loss": jnp.zeros((), jnp.float32),
+                  "load_balance": jnp.zeros((), jnp.float32),
+                  "router_z": jnp.zeros((), jnp.float32),
+                  "dropped_frac": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(accum, (g0, m0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        params, opt_state, opt_metrics = opt_update(grads, opt_state, params)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return step
+
+
+def build_dnn_train_step(cfg, opt_update: Callable, loss_fn: Callable):
+    """Train step for the paper's tabular MLPs (core sweep workload)."""
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch, key=None):
+        (loss, aux), grads = grad_fn(params, cfg, batch, key)
+        params, opt_state, om = opt_update(grads, opt_state, params)
+        m = {"loss": loss, **aux, **om}
+        return params, opt_state, m
+
+    return step

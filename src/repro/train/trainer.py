@@ -1,0 +1,61 @@
+"""Host training loop: stream -> jit step -> metrics -> periodic checkpoint.
+
+This is the end-to-end driver used by examples/train_lm.py; the sweep
+engine's workers reuse the same loop for per-task training.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+
+
+@dataclass
+class TrainLog:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    times: list = field(default_factory=list)
+    extra: list = field(default_factory=list)
+
+    def record(self, step, metrics, dt):
+        self.steps.append(step)
+        self.losses.append(float(metrics.get("loss", np.nan)))
+        self.times.append(dt)
+        self.extra.append({k: float(v) for k, v in metrics.items()
+                           if np.ndim(v) == 0})
+
+
+def train_loop(step_fn: Callable, params, opt_state, data: Iterable, *,
+               num_steps: int, log_every: int = 10,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+               donate: bool = True, verbose: bool = True) -> tuple:
+    """Generic loop. step_fn may be pre-jitted (recommended); if not, it is
+    jitted here with donated params/opt_state for in-place buffer reuse."""
+    if not hasattr(step_fn, "lower"):
+        step_fn = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    log = TrainLog()
+    it = iter(data)
+    t_prev = time.perf_counter()
+    for s in range(1, num_steps + 1):
+        batch = next(it)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if s % log_every == 0 or s == num_steps:
+            jax.block_until_ready(metrics["loss"])
+            now = time.perf_counter()
+            log.record(s, metrics, now - t_prev)
+            t_prev = now
+            if verbose:
+                print(f"  step {s:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"({log.times[-1]:.2f}s)")
+        if ckpt_dir and ckpt_every and s % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, s, {"params": params,
+                                          "opt_state": opt_state})
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, num_steps, {"params": params,
+                                              "opt_state": opt_state})
+    return params, opt_state, log

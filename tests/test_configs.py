@@ -1,0 +1,75 @@
+"""Config sanity: analytic parameter counts land near the published model
+sizes; reduced variants stay in smoke budget; shape-case construction."""
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.launch.shapes import SHAPES, decode_cache_len, dryrun_config
+
+EXPECTED_PARAMS_B = {          # published totals (embedding-inclusive), +-25%
+    "mistral-nemo-12b": 12.2,
+    "starcoder2-7b": 7.2,
+    "qwen3-4b": 4.0,
+    "qwen3-1.7b": 2.0,
+    "recurrentgemma-9b": 9.5,
+    "mamba2-130m": 0.13,
+    "granite-moe-3b-a800m": 3.4,
+    "granite-moe-1b-a400m": 1.4,
+    "pixtral-12b": 12.9,
+}
+
+
+@pytest.mark.parametrize("arch,expect", sorted(EXPECTED_PARAMS_B.items()))
+def test_param_count_close_to_published(arch, expect):
+    n = registry.get(arch).param_count() / 1e9
+    assert 0.75 * expect < n < 1.3 * expect, (arch, n, expect)
+
+
+def test_moe_active_params():
+    cfg = registry.get("granite-moe-3b-a800m")
+    active = cfg.active_param_count() / 1e9
+    assert 0.5 < active < 1.3          # "a800m" = ~0.8B active
+    cfg1 = registry.get("granite-moe-1b-a400m")
+    assert 0.25 < cfg1.active_param_count() / 1e9 < 0.7
+
+
+def test_layer_types_cover_all_layers():
+    for arch in registry.ARCH_IDS:
+        cfg = registry.get(arch)
+        assert len(cfg.layer_types()) == cfg.n_layers
+
+
+def test_recurrentgemma_ratio():
+    types = registry.get("recurrentgemma-9b").layer_types()
+    assert len(types) == 38
+    assert types.count("attn") == 12 and types.count("rglru") == 26
+
+
+def test_decode_cache_lengths():
+    # full attention at 32k -> full cache; at 500k -> sliding window variant
+    nemo = dryrun_config(registry.get("mistral-nemo-12b"))
+    assert decode_cache_len(nemo, SHAPES["decode_32k"]) == 32768
+    assert decode_cache_len(nemo, SHAPES["long_500k"]) == 4096
+    # native window arch keeps its window everywhere
+    rg = dryrun_config(registry.get("recurrentgemma-9b"))
+    assert decode_cache_len(rg, SHAPES["decode_32k"]) == 2048
+    assert decode_cache_len(rg, SHAPES["long_500k"]) == 2048
+
+
+def test_dryrun_config_padding_rules():
+    g = dryrun_config(registry.get("granite-moe-3b-a800m"))
+    assert g.padded_vocab_size % 256 == 0
+    assert g.moe.padded_n_experts == 48
+    assert not g.seq_parallel            # MoE: SP gated off (§Perf-8)
+    q = dryrun_config(registry.get("qwen3-4b"))
+    assert q.seq_parallel
+    m = dryrun_config(registry.get("mamba2-130m"))
+    assert not m.seq_parallel
+
+
+def test_reduced_configs_within_smoke_budget():
+    for arch in registry.ARCH_IDS:
+        r = registry.get(arch, reduced=True)
+        assert r.d_model <= 512 and r.n_layers <= 3
+        if r.moe:
+            assert r.moe.n_experts <= 4

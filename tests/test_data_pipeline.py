@@ -1,0 +1,88 @@
+"""Property tests (hypothesis) for the paper's preprocessing best-practices:
+[0,1] scaling, one-hot labels, 80/20 split, zero-filled missing values, and
+CSV structural-error semantics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import pipeline, synthetic
+
+finite_floats = st.floats(allow_nan=False, allow_infinity=False,
+                          min_value=-1e6, max_value=1e6, width=32)
+
+
+@given(st.lists(st.lists(finite_floats, min_size=3, max_size=3),
+                min_size=4, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_scale_unit_range_property(rows):
+    x = np.array(rows, np.float64)
+    scaled, lo, hi = pipeline.scale_unit(x)
+    assert scaled.min() >= 0.0 and scaled.max() <= 1.0
+    # columns with spread hit both endpoints
+    span = x.max(0) - x.min(0)
+    for j in range(x.shape[1]):
+        if span[j] > 0:
+            assert np.isclose(scaled[:, j].min(), 0.0)
+            assert np.isclose(scaled[:, j].max(), 1.0)
+        else:
+            assert (scaled[:, j] == 0).all()
+
+
+@given(st.lists(st.sampled_from(["a", "b", "c", "d"]), min_size=1,
+                max_size=100))
+@settings(max_examples=50, deadline=None)
+def test_one_hot_property(labels):
+    oh, classes = pipeline.one_hot_labels(labels)
+    assert oh.shape == (len(labels), len(classes))
+    assert (oh.sum(axis=1) == 1).all()
+    # invertible
+    rec = [classes[i] for i in oh.argmax(axis=1)]
+    assert rec == [str(l) for l in labels]
+
+
+@given(st.integers(min_value=10, max_value=500),
+       st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_split_property(n, seed):
+    x = np.arange(n * 2, dtype=np.float64).reshape(n, 2)
+    y = np.zeros((n, 2), np.float32)
+    xtr, ytr, xte, yte = pipeline.train_test_split(x, y, seed=seed)
+    assert len(xte) == int(round(n * 0.2))
+    assert len(xtr) + len(xte) == n
+    # partition: no row lost or duplicated
+    allrows = np.concatenate([xtr[:, 0], xte[:, 0]])
+    assert sorted(allrows.tolist()) == sorted(x[:, 0].tolist())
+
+
+def test_fill_missing_zero():
+    x = np.array([[1.0, np.nan], [np.inf, 2.0]])
+    out = pipeline.fill_missing(x)
+    assert out[0, 1] == 0.0 and out[1, 0] == 0.0
+    assert out[0, 0] == 1.0 and out[1, 1] == 2.0
+
+
+def test_csv_structural_error_aborts():
+    with pytest.raises(pipeline.CSVFormatError):
+        pipeline.parse_csv("a,b\n1,2\n3")       # ragged row
+    with pytest.raises(pipeline.CSVFormatError):
+        pipeline.parse_csv("")
+    with pytest.raises(pipeline.CSVFormatError):
+        pipeline.prepare("a,b\n1,2", label="nope")
+
+
+def test_missing_values_are_not_errors():
+    """Paper: 'missing data was not considered an error'."""
+    csv = "f0,f1,label\n" + "1.0,,x\n,2.0,y\n0.5,0.5,x\n0.1,0.2,y\n" * 3
+    ds = pipeline.prepare(csv, "label")
+    assert np.isfinite(ds.x_train).all()
+    assert ds.n_classes == 2
+
+
+def test_prepare_end_to_end_stats():
+    csv = synthetic.classification_csv(500, 6, 3, seed=1)
+    ds = pipeline.prepare(csv, "label", seed=1)
+    assert ds.x_train.shape[1] == 6 and ds.n_classes == 3
+    assert 0 <= ds.x_train.min() and ds.x_train.max() <= 1.0
+    assert len(ds.x_test) == 100
+    # test scaling reuses train stats -> may clip but stays in range
+    assert 0 <= ds.x_test.min() and ds.x_test.max() <= 1.0

@@ -1,0 +1,41 @@
+"""Sharded-training driver: runs the REAL mesh path (rule-engine shardings,
+donated jit) on an 8-device host mesh via subprocess (device count locks at
+first jax init, so this process stays single-device)."""
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ,
+           PYTHONPATH=os.path.join(REPO, "src"),
+           XLA_FLAGS="--xla_force_host_platform_device_count=8")
+
+SCRIPT = r"""
+import numpy as np
+import jax
+from repro.configs import registry
+from repro.data.tokens import TokenStream
+from repro.launch.distributed import train_sharded
+from repro.launch.mesh import make_debug_mesh
+
+assert jax.device_count() == 8
+mesh = make_debug_mesh(multi_pod=True)          # (2,2,2) pod/data/model
+cfg = registry.get("qwen3-1.7b", reduced=True)
+stream = TokenStream(cfg.vocab_size, 32, 8, seed=0, branch=4)
+params, opt_state, losses = train_sharded(cfg, mesh, iter(stream),
+                                          num_steps=8, lr=5e-3,
+                                          log_every=2, verbose=False)
+assert all(np.isfinite(l) for l in losses), losses
+# params actually sharded: embed table split over "model"
+shard_shapes = {s.data.shape for s in params["embed"]["table"].addressable_shards}
+full = params["embed"]["table"].shape
+assert any(ss != full for ss in shard_shapes), (shard_shapes, full)
+print("SHARDED_TRAIN_OK", losses[0], "->", losses[-1])
+"""
+
+
+def test_sharded_train_on_multipod_debug_mesh():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], cwd=REPO, env=ENV,
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "SHARDED_TRAIN_OK" in r.stdout

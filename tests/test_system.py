@@ -1,0 +1,129 @@
+"""End-to-end behaviour tests for the paper's system: upload -> preprocess
+-> enqueue sweep -> distributed workers -> results -> reporting, including
+fail-forward isolation and the population (vmapped) execution plane."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (ResultStore, SearchSpace, Session, TaskQueue,
+                        WorkerPool, plan_sweep, reporting, train_population)
+from repro.core.tasks import TaskSpec
+from repro.core.worker import Worker
+from repro.data import pipeline, synthetic
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    csv = synthetic.classification_csv(600, 8, 3, seed=0)
+    return pipeline.prepare(csv, "label")
+
+
+def _session(tmp_path, name):
+    q = TaskQueue(os.path.join(tmp_path, f"{name}.journal"))
+    rs = ResultStore(os.path.join(tmp_path, f"{name}.jsonl"))
+    return Session(q, rs)
+
+
+def test_sweep_end_to_end(tmp_path, dataset):
+    sess = _session(tmp_path, "e2e")
+    ctx = {"datasets": {"default": dataset}}
+    space = SearchSpace(hidden_layer_counts=(1, 2), hidden_widths=(16,),
+                        activation_sets=(("relu",),), epochs=1, batch_size=64)
+    tasks = space.tasks(sess.session_id)
+    sess.queue.put_many(tasks)
+    sess.register_tasks(len(tasks))
+    WorkerPool(2, sess.queue, sess.results, ctx).run_until_empty()
+    p = sess.progress()
+    assert p["finished"] and p["ok"] == len(tasks) and p["failed"] == 0
+    for doc in sess.results.find(sess.session_id):
+        assert 0.0 <= doc["metrics"]["accuracy"] <= 1.0
+        assert doc["train_time"] > 0
+
+
+def test_fail_forward_isolation(tmp_path, dataset):
+    """A failing task is recorded + dead-lettered; healthy tasks complete."""
+    sess = _session(tmp_path, "ff")
+    ctx = {"datasets": {"default": dataset}}
+    good = SearchSpace(hidden_layer_counts=(1,), hidden_widths=(8,),
+                       epochs=1, batch_size=64).tasks(sess.session_id)
+    bad = [TaskSpec.make(sess.session_id, "dnn_train",
+                         {"hidden_sizes": [8], "fail": True, "epochs": 1},
+                         max_retries=0)]
+    sess.queue.put_many(good + bad)
+    sess.register_tasks(len(good) + len(bad))
+    w = Worker("w0", sess.queue, sess.results, ctx)
+    w.run_until_empty()
+    rep = reporting.failure_report(sess.results, sess.session_id)
+    assert rep["failed"] >= 1                    # recorded, not crashed
+    assert sess.results.count(sess.session_id, status="ok") == len(good)
+    assert len(sess.queue.dead_letters()) == 1
+    failed_doc = sess.results.find(sess.session_id, status="failed")[0]
+    assert "injected failure" in failed_doc["error"]
+
+
+def test_unknown_kind_fails_forward(tmp_path, dataset):
+    sess = _session(tmp_path, "uk")
+    sess.queue.put(TaskSpec.make(sess.session_id, "no_such_kind", {},
+                                 max_retries=0))
+    Worker("w", sess.queue, sess.results, {}).run_until_empty()
+    assert sess.results.count(sess.session_id, status="failed") == 1
+
+
+def test_population_plane_matches_queue_plane(tmp_path, dataset):
+    """Population (vmapped) training produces accuracies on par with the
+    queue plane for identical tasks — the two planes are interchangeable."""
+    sess = _session(tmp_path, "pop")
+    ctx = {"datasets": {"default": dataset}}
+    space = SearchSpace(hidden_layer_counts=(2,), hidden_widths=(32,),
+                        activation_sets=(("relu",),),
+                        learning_rates=(1e-2,), epochs=3, batch_size=64,
+                        seeds=(0, 1, 2, 3))
+    tasks = space.tasks(sess.session_id)
+    plan = plan_sweep(tasks, min_block=2)
+    assert len(plan.population_blocks) == 1 and not plan.queue_tasks
+    docs = train_population(plan.population_blocks[0], ctx,
+                            results=sess.results)
+    accs = [d["metrics"]["accuracy"] for d in docs]
+    assert all(d["status"] == "ok" for d in docs)
+    assert np.mean(accs) > 0.5                   # learned something real
+
+    # queue plane on one identical task
+    sess.queue.put(tasks[0])
+    Worker("w", sess.queue, sess.results, ctx).run_until_empty()
+    qdocs = sess.results.find(sess.session_id, status="ok",
+                              task_id=tasks[0].task_id)
+    qacc = [d["metrics"]["accuracy"] for d in qdocs
+            if d["metrics"].get("population_size") is None]
+    assert qacc and abs(qacc[0] - accs[0]) < 0.15
+
+
+def test_reporting_pipeline(tmp_path, dataset):
+    sess = _session(tmp_path, "rep")
+    ctx = {"datasets": {"default": dataset}}
+    space = SearchSpace(hidden_layer_counts=(1, 2, 3), hidden_widths=(16,),
+                        epochs=1, batch_size=64)
+    sess.queue.put_many(space.tasks(sess.session_id))
+    Worker("w", sess.queue, sess.results, ctx).run_until_empty()
+    rows = reporting.time_vs_layers(sess.results, sess.session_id)
+    assert [r[0] for r in rows] == [1, 2, 3]
+    fit = reporting.linear_fit(rows)
+    assert "slope" in fit and "r2" in fit
+    cap = reporting.accuracy_vs_capacity(sess.results, sess.session_id)
+    assert len(cap) == 3
+    art = reporting.ascii_scatter(rows, xlabel="layers", ylabel="time")
+    assert "*" in art
+    md = reporting.to_markdown(rows, ["layers", "time"])
+    assert md.count("|") > 6
+
+
+def test_lm_train_executor(tmp_path):
+    """The LM-zoo executor trains a reduced assigned arch via the queue."""
+    sess = _session(tmp_path, "lm")
+    sess.queue.put(TaskSpec.make(sess.session_id, "lm_train",
+                                 {"arch": "qwen3-1.7b", "steps": 3,
+                                  "batch_size": 2, "seq_len": 16}))
+    Worker("w", sess.queue, sess.results, {}).run_until_empty()
+    docs = sess.results.find(sess.session_id, status="ok")
+    assert len(docs) == 1
+    assert np.isfinite(docs[0]["metrics"]["final_loss"])
