@@ -17,6 +17,7 @@ MODULES = [
     ("population", "benchmarks.bench_population_vs_queue"),
     ("workers", "benchmarks.bench_worker_scaling"),
     ("serving", "benchmarks.bench_serving"),
+    ("gateway", "benchmarks.bench_gateway"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]

@@ -1,6 +1,13 @@
-"""Batched serving demo: continuous batching over a reduced assigned arch.
+"""Batched serving demo: the queue-backed gateway streaming tokens from a
+reduced assigned arch with per-request sampling.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m]
+    PYTHONPATH=src python examples/serve_lm.py [--arch mamba2-130m] \
+        [--policy least-loaded] [--temperature 0.8] [--stream]
+
+Every prompt is published to the durable TaskQueue, dispatched to an engine
+replica by the chosen policy, and decoded with its own SamplingParams; with
+--stream the tokens print as each lockstep decode step lands (the
+`on_token` callback fires inside `Gateway.step`, not after `run()`).
 """
 import argparse
 import sys
@@ -12,9 +19,33 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--policy", default="round-robin")
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--top-k", type=int, default=8)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true", default=True,
+                    help="print tokens as they decode (default on)")
+    ap.add_argument("--no-stream", dest="stream", action="store_false")
+    ap.add_argument("--dashboard", action="store_true", default=True,
+                    help="print the queue/slot dashboard (default on)")
+    ap.add_argument("--no-dashboard", dest="dashboard",
+                    action="store_false")
     args = ap.parse_args()
-    sys.argv = [sys.argv[0], "--arch", args.arch,
-                "--requests", str(args.requests)]
+    argv = [sys.argv[0], "--arch", args.arch,
+            "--requests", str(args.requests),
+            "--replicas", str(args.replicas),
+            "--policy", args.policy,
+            "--temperature", str(args.temperature),
+            "--top-k", str(args.top_k),
+            "--top-p", str(args.top_p),
+            "--seed", str(args.seed)]
+    if args.dashboard:
+        argv.append("--dashboard")
+    if args.stream:
+        argv.append("--stream")
+    sys.argv = argv
     serve.main()
 
 

@@ -92,12 +92,31 @@ class TaskQueue:
             self._expire_locked()
             while self._heap:
                 _, _, tid = heapq.heappop(self._heap)
-                if tid in self._acked or tid in self._dead:
+                # skip done/dead ids and duplicate heap entries for a task
+                # that is currently leased (expiry-requeue followed by a
+                # late nack leaves two entries; delivering both would hand
+                # one task to two consumers concurrently)
+                if tid in self._acked or tid in self._dead \
+                        or tid in self._leased:
                     continue
                 self._leased[tid] = time.time() + lease_seconds
                 self._log("lease", id=tid)
                 return self._tasks[tid]
             return None
+
+    def extend_lease(self, task_id: str, seconds: float = 300.0) -> bool:
+        """Heartbeat: push a leased task's visibility deadline out by
+        `seconds`. Long-running consumers (e.g. the serving gateway, whose
+        decodes can outlast any fixed lease) call this each step so the task
+        is not redelivered mid-flight. Returns False if the task is not
+        currently leased (already acked/expired)."""
+        with self._lock:
+            if task_id not in self._leased:
+                return False
+            # not journaled: replay restores leases as pending anyway, so
+            # extend records would be O(steps) dead weight in the journal
+            self._leased[task_id] = time.time() + seconds
+            return True
 
     def ack(self, task_id: str):
         with self._lock:
@@ -105,8 +124,9 @@ class TaskQueue:
             self._acked.add(task_id)
             self._log("ack", id=task_id)
 
-    def nack(self, task_id: str):
-        """Failure: requeue up to max_retries, then dead-letter."""
+    def nack(self, task_id: str) -> bool:
+        """Failure: requeue up to max_retries, then dead-letter. Returns
+        True when this nack dead-lettered the task (retries exhausted)."""
         with self._lock:
             self._leased.pop(task_id, None)
             n = self._retries.get(task_id, 0) + 1
@@ -115,10 +135,11 @@ class TaskQueue:
             if n > spec.max_retries:
                 self._dead.append(task_id)
                 self._log("dead", id=task_id)
-            else:
-                self._log("nack", id=task_id, retries=n)
-                heapq.heappush(self._heap,
-                               (-spec.priority, next(self._seq), task_id))
+                return True
+            self._log("nack", id=task_id, retries=n)
+            heapq.heappush(self._heap,
+                           (-spec.priority, next(self._seq), task_id))
+            return False
 
     def _expire_locked(self):
         now = time.time()
@@ -131,14 +152,22 @@ class TaskQueue:
             self._log("expire", id=tid)
 
     # ------------------------------------------------------------ stats
+    def _deliverable_locked(self) -> int:
+        """Tasks that get() would actually hand out: excludes done/dead/
+        leased ids and counts duplicate heap entries (expiry-requeue plus a
+        late nack can leave two) once."""
+        return len({h[2] for h in self._heap
+                    if h[2] not in self._acked and h[2] not in self._dead
+                    and h[2] not in self._leased})
+
     def depth(self) -> int:
         with self._lock:
-            return len([1 for h in self._heap
-                        if h[2] not in self._acked and h[2] not in self._dead])
+            return self._deliverable_locked()
 
     def stats(self) -> dict:
         with self._lock:
-            return {"pending": len(self._heap), "leased": len(self._leased),
+            return {"pending": self._deliverable_locked(),
+                    "leased": len(self._leased),
                     "acked": len(self._acked), "dead": len(self._dead)}
 
     def dead_letters(self) -> List[TaskSpec]:

@@ -89,6 +89,45 @@ def to_markdown(rows: Sequence[Tuple], header: Sequence[str]) -> str:
     return "\n".join(out)
 
 
+# ------------------------------------------------------- serving dashboards
+
+def gateway_summary_table(summary: Dict[str, float]) -> str:
+    """Markdown table of one gateway run's throughput/latency summary
+    (`repro.gateway.GatewayMetrics.summary()`), the serving analogue of the
+    paper's Fig 6 queue dashboard."""
+    rows = [(k, f"{v:.3f}" if isinstance(v, float) else v)
+            for k, v in summary.items()]
+    return to_markdown(rows, ("metric", "value"))
+
+
+def gauge_series(gauges: Sequence[Tuple[float, int, int]], column: int
+                 ) -> List[Tuple[float, float]]:
+    """(elapsed_seconds, value) rows from step-sampled gateway gauges.
+    column 1 = queue depth, column 2 = active slots."""
+    if not gauges:
+        return []
+    t0 = gauges[0][0]
+    return [(g[0] - t0, float(g[column])) for g in gauges]
+
+
+def gateway_dashboard(summary: Dict[str, float],
+                      gauges: Sequence[Tuple[float, int, int]]) -> str:
+    """Full text dashboard: summary table + queue-depth-over-time (Fig 6
+    shape) + slot-occupancy-over-time (Fig 7 shape, worker status)."""
+    parts = ["## gateway summary", gateway_summary_table(summary)]
+    depth = gauge_series(gauges, 1)
+    if depth:
+        parts += ["\n## queue depth (Fig 6)",
+                  ascii_scatter(depth, xlabel="elapsed s",
+                                ylabel="queue depth")]
+    active = gauge_series(gauges, 2)
+    if active:
+        parts += ["\n## active slots (Fig 7)",
+                  ascii_scatter(active, xlabel="elapsed s",
+                                ylabel="busy slots")]
+    return "\n".join(parts)
+
+
 def linear_fit(rows: Sequence[Tuple[float, float]]) -> dict:
     """Least-squares fit + R^2 — used to validate finding F2 (time grows
     ~linearly with layer count)."""

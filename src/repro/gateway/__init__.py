@@ -1,0 +1,8 @@
+"""Serving gateway: queue-backed routing, sampling, streaming, telemetry."""
+from repro.gateway.gateway import (POLICIES, DispatchPolicy,  # noqa: F401
+                                   EngineReplica, Gateway, GatewayRequest,
+                                   LeastLoaded, PrefixAffinity, RoundRobin)
+from repro.gateway.metrics import GatewayMetrics, RequestMetrics  # noqa: F401
+from repro.gateway.sampler import (GREEDY, Sampler,  # noqa: F401
+                                   SamplingParams, sample_token)
+from repro.gateway.streaming import TokenStream  # noqa: F401

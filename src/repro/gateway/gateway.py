@@ -1,0 +1,431 @@
+"""Request router: the queue-backed, multi-replica front door for serving.
+
+This is the paper's queue/worker architecture applied to inference. Incoming
+prompts are published to the durable `TaskQueue` (priorities, journaling,
+lease-based redelivery) instead of an engine's naive FIFO list; dispatch
+pulls tasks only when a replica has a free slot, so the queue — not engine
+memory — holds the backlog. Engine replicas are the dispensable workers: a
+replica that throws mid-decode is marked unhealthy, its leased requests are
+nacked back to the queue and re-dispatched to surviving replicas (fail
+forward, at-least-once). A pluggable `DispatchPolicy` decides placement:
+
+  * round-robin      — rotate over replicas with free capacity
+  * least-loaded     — fewest occupied slots first
+  * prefix-affinity  — same prompt prefix -> same replica (cache locality)
+
+Each request carries its own `SamplingParams` and exposes a `TokenStream`
+plus a `RequestMetrics` record; gauges and percentiles come out through
+`GatewayMetrics.summary()` / `core.reporting.gateway_dashboard`.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+import uuid
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.queue import TaskQueue
+from repro.core.tasks import TaskSpec
+from repro.gateway.metrics import GatewayMetrics, RequestMetrics
+from repro.gateway.sampler import GREEDY, SamplingParams
+from repro.gateway.streaming import TokenStream
+from repro.serve.engine import Request, ServeEngine
+
+
+# --------------------------------------------------------------- replicas
+
+class EngineReplica:
+    """One ServeEngine plus the health/load view the dispatcher needs."""
+
+    def __init__(self, replica_id: int, engine: ServeEngine):
+        self.replica_id = replica_id
+        self.engine = engine
+        self.healthy = True
+
+    def free_slots(self) -> int:
+        return self.engine.free_slots()
+
+    def load(self) -> int:
+        return self.engine.active_count() + self.engine.pending_count()
+
+    def __repr__(self):
+        return (f"EngineReplica({self.replica_id}, load={self.load()}, "
+                f"healthy={self.healthy})")
+
+
+# --------------------------------------------------------------- policies
+
+class DispatchPolicy:
+    """Chooses a replica for a task among those with free capacity."""
+    name = "base"
+
+    def choose(self, eligible: List[EngineReplica], spec: TaskSpec,
+               replicas: List[EngineReplica]) -> EngineReplica:
+        raise NotImplementedError
+
+
+class RoundRobin(DispatchPolicy):
+    name = "round-robin"
+
+    def __init__(self):
+        self._turn = itertools.count()
+
+    def choose(self, eligible, spec, replicas):
+        return eligible[next(self._turn) % len(eligible)]
+
+
+class LeastLoaded(DispatchPolicy):
+    name = "least-loaded"
+
+    def choose(self, eligible, spec, replicas):
+        return min(eligible, key=lambda r: (r.load(), r.replica_id))
+
+
+class PrefixAffinity(DispatchPolicy):
+    """Requests sharing a prompt prefix land on the same replica, so a
+    replica-local prefix cache (or just a warm KV working set) keeps hitting.
+    Falls back to least-loaded when the preferred replica is full/unhealthy.
+    """
+    name = "prefix-affinity"
+
+    def __init__(self, prefix_len: int = 8):
+        self.prefix_len = prefix_len
+
+    def preferred_id(self, prompt: List[int], n_replicas: int) -> int:
+        key = zlib.crc32(repr(list(prompt[:self.prefix_len])).encode())
+        return key % max(n_replicas, 1)
+
+    def choose(self, eligible, spec, replicas):
+        prompt = spec.payload.get("prompt", [])
+        want = self.preferred_id(prompt, len(replicas))
+        for r in eligible:
+            if r.replica_id == want:
+                return r
+        return min(eligible, key=lambda r: (r.load(), r.replica_id))
+
+
+POLICIES: Dict[str, Callable[[], DispatchPolicy]] = {
+    RoundRobin.name: RoundRobin,
+    LeastLoaded.name: LeastLoaded,
+    PrefixAffinity.name: PrefixAffinity,
+}
+
+
+# --------------------------------------------------------------- requests
+
+@dataclass
+class GatewayRequest:
+    """Caller-facing handle: identity, stream, metrics, lifecycle status."""
+    gid: int
+    task_id: str
+    prompt: List[int]
+    max_new_tokens: int
+    eos_id: Optional[int]
+    sampling: SamplingParams
+    priority: int = 0
+    deadline: Optional[float] = None          # absolute perf_counter time
+    stream: TokenStream = None
+    metrics: RequestMetrics = None
+    replica_id: Optional[int] = None
+    engine_req: Optional[Request] = field(default=None, repr=False)
+
+    @property
+    def status(self) -> str:
+        """queued | running | done | rejected | failed — single-sourced
+        from the metrics record so handle and telemetry can never drift."""
+        return self.metrics.status if self.metrics else "queued"
+
+    @property
+    def output(self) -> List[int]:
+        return list(self.engine_req.output) if self.engine_req else []
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        """Request-scoped failure (e.g. sampling error), if any."""
+        return self.engine_req.error if self.engine_req else None
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+    @property
+    def finished(self) -> bool:
+        return self.status in ("done", "rejected", "failed")
+
+
+# ---------------------------------------------------------------- gateway
+
+class Gateway:
+    def __init__(self, engines: List[ServeEngine], *,
+                 policy: str | DispatchPolicy = "round-robin",
+                 journal_path: Optional[str] = None,
+                 session_id: str = "serve",
+                 lease_seconds: float = 30.0,
+                 max_retries: int = 2):
+        if not engines:
+            raise ValueError("Gateway needs at least one engine replica")
+        self.queue = TaskQueue(journal_path)
+        self.session_id = session_id
+        # per-process nonce, fed into each task's payload so TaskSpec.make
+        # digests to a fresh task_id: without it, a second run sharing a
+        # journal would reuse run 1's (acked) ids and its requests would
+        # silently never dispatch
+        self._run_id = uuid.uuid4().hex[:12]
+        self.lease_seconds = lease_seconds
+        self.max_retries = max_retries
+        self.policy = (POLICIES[policy]() if isinstance(policy, str)
+                       else policy)
+        self.replicas = [EngineReplica(i, e) for i, e in enumerate(engines)]
+        self.metrics = GatewayMetrics(
+            total_slots=sum(e.slots for e in engines))
+        self._gid = itertools.count()
+        self._by_gid: Dict[int, GatewayRequest] = {}
+        # task_id -> handle, for every request this process knows (own
+        # submissions and adopted journal-recovered tasks alike) — the
+        # durable task identity, immune to gid renumbering across runs
+        self._by_task: Dict[str, GatewayRequest] = {}
+        # task_id -> (gwreq, replica) for everything leased from the queue
+        self._inflight: Dict[str, Tuple[GatewayRequest, EngineReplica]] = {}
+        self._last_heartbeat = 0.0
+        # tasks already marked failed by _abort_queued; their leases expire
+        # and redeliver (they are deliberately never acked), so remember
+        # them or each expiry would re-fail / re-adopt the same task
+        self._aborted: set = set()
+        for r in self.replicas:
+            self._wire(r)
+
+    @classmethod
+    def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
+              cache_len: int = 256, window=None, prefill_mode: str = "decode",
+              **kw) -> "Gateway":
+        engines = [ServeEngine(params, cfg, batch_slots=batch_slots,
+                               cache_len=cache_len, window=window,
+                               prefill_mode=prefill_mode)
+                   for _ in range(replicas)]
+        return cls(engines, **kw)
+
+    # ------------------------------------------------------------- intake
+    def submit(self, prompt: List[int], *, max_new_tokens: int = 16,
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               priority: int = 0, timeout_s: Optional[float] = None,
+               on_token: Optional[Callable[[int], None]] = None
+               ) -> GatewayRequest:
+        """Publish one prompt to the queue; returns a handle whose `stream`
+        yields tokens as they decode (iterating pumps the gateway)."""
+        gid = next(self._gid)
+        sampling = sampling or GREEDY
+        payload = {"gid": gid, "run": self._run_id, "prompt": list(prompt),
+                   "max_new_tokens": max_new_tokens, "eos_id": eos_id,
+                   "sampling": sampling.to_payload(),
+                   "timeout_s": timeout_s}
+        spec = TaskSpec.make(self.session_id, "serve_lm", payload,
+                             priority=priority, max_retries=self.max_retries)
+        gwreq = GatewayRequest(
+            gid=gid, task_id=spec.task_id, prompt=list(prompt),
+            max_new_tokens=max_new_tokens, eos_id=eos_id, sampling=sampling,
+            priority=priority,
+            deadline=(time.perf_counter() + timeout_s
+                      if timeout_s is not None else None),
+            stream=TokenStream(pump=self.step, on_token=on_token))
+        gwreq.metrics = self.metrics.submit(gid, len(prompt))
+        self._by_gid[gid] = gwreq
+        self._by_task[spec.task_id] = gwreq
+        self.queue.put(spec)
+        return gwreq
+
+    # ------------------------------------------------------------ dispatch
+    def _eligible(self) -> List[EngineReplica]:
+        return [r for r in self.replicas if r.healthy and r.free_slots() > 0]
+
+    def _dispatch_ready(self):
+        while True:
+            eligible = self._eligible()
+            if not eligible:
+                return
+            spec = self.queue.get(lease_seconds=self.lease_seconds)
+            if spec is None:
+                return
+            if spec.task_id in self._inflight:
+                # our own lease expired mid-decode (a step can outlast it,
+                # e.g. first-step jit compile); the queue's get() above
+                # already re-leased it — keep the existing placement rather
+                # than double-placing a still-running request
+                continue
+            gwreq = self._by_task.get(spec.task_id)
+            if gwreq is None:                   # replayed from the journal
+                gwreq = self._adopt(spec)
+            if gwreq.deadline is not None and \
+                    time.perf_counter() > gwreq.deadline:
+                self._reject(gwreq, spec.task_id)
+                continue
+            replica = self.policy.choose(eligible, spec, self.replicas)
+            self._place(gwreq, spec.task_id, replica)
+
+    def _place(self, gwreq: GatewayRequest, task_id: str,
+               replica: EngineReplica):
+        req = Request(gwreq.gid, list(gwreq.prompt), gwreq.max_new_tokens,
+                      gwreq.eos_id, gwreq.sampling)
+        gwreq.engine_req = req
+        gwreq.replica_id = replica.replica_id
+        replica.engine.enqueue(req)
+        self._inflight[task_id] = (gwreq, replica)
+        self.metrics.dispatch(gwreq.gid, replica.replica_id)
+
+    def _adopt(self, spec: TaskSpec) -> GatewayRequest:
+        """Journal recovery: a pending task published by a previous gateway
+        process has no in-memory handle here; rebuild one from the durable
+        payload (the paper's crash recovery — at-least-once delivery). The
+        task keeps its journal identity but gets a fresh local gid, and its
+        timeout restarts from adoption (the original absolute deadline did
+        not survive the crash)."""
+        p = spec.payload
+        gid = next(self._gid)
+        gwreq = GatewayRequest(
+            gid=gid, task_id=spec.task_id, prompt=list(p.get("prompt", [])),
+            max_new_tokens=int(p.get("max_new_tokens", 16)),
+            eos_id=p.get("eos_id"),
+            sampling=SamplingParams.from_payload(p.get("sampling") or {}),
+            priority=spec.priority,
+            deadline=(time.perf_counter() + p["timeout_s"]
+                      if p.get("timeout_s") is not None else None),
+            stream=TokenStream(pump=self.step))
+        gwreq.metrics = self.metrics.submit(gid, len(gwreq.prompt))
+        self._by_gid[gid] = gwreq
+        self._by_task[spec.task_id] = gwreq
+        return gwreq
+
+    def _reject(self, gwreq: GatewayRequest, task_id: str):
+        """Deadline passed while queued: drop before burning decode compute
+        (an ack removes it; the journal keeps the record)."""
+        self.queue.ack(task_id)
+        gwreq.stream.finish()
+        self.metrics.reject(gwreq.gid)
+
+    # -------------------------------------------------------- engine hooks
+    def _wire(self, replica: EngineReplica):
+        eng = replica.engine
+        # the gateway keeps its own handles; don't also retain finished
+        # Requests engine-side (a long-lived frontend would leak them)
+        eng.retain_finished = False
+
+        def on_token(req: Request, tok: int):
+            gwreq = self._by_gid.get(req.request_id)
+            if gwreq is not None and gwreq.engine_req is req:
+                gwreq.stream.push(tok)
+                self.metrics.token(gwreq.gid)
+
+        def on_finish(req: Request):
+            gwreq = self._by_gid.get(req.request_id)
+            if gwreq is None or gwreq.engine_req is not req:
+                return
+            self.queue.ack(gwreq.task_id)
+            self._inflight.pop(gwreq.task_id, None)
+            if req.error is not None:
+                # request-scoped failure (e.g. sampling blew up on NaN
+                # logits): deterministic, so retry is pointless — ack and
+                # fail just this request, replica stays healthy
+                self.metrics.reject(gwreq.gid, status="failed")
+            else:
+                self.metrics.finish(gwreq.gid)
+            gwreq.stream.finish()
+
+        eng.on_token = on_token
+        eng.on_finish = on_finish
+
+    # ------------------------------------------------------------- failure
+    def _fail_replica(self, replica: EngineReplica, err: Exception):
+        """Dispensable-worker semantics: mark the replica unhealthy and nack
+        its leased requests so the queue re-delivers them (to other
+        replicas) or dead-letters after max_retries."""
+        replica.healthy = False
+        victims = [(tid, gwreq) for tid, (gwreq, r) in self._inflight.items()
+                   if r is replica]
+        for tid, gwreq in victims:
+            del self._inflight[tid]
+            replica.engine.evict(gwreq.engine_req)
+            gwreq.engine_req = None
+            gwreq.stream.reset()
+            if self.queue.nack(tid):            # retries exhausted
+                gwreq.stream.finish()
+                self.metrics.reject(gwreq.gid, status="failed")
+            else:
+                self.metrics.requeue(gwreq.gid)
+
+    def _abort_queued(self):
+        """No healthy replica remains: mark everything still waiting as
+        failed locally so run() terminates and streams unblock — but do NOT
+        ack, so the tasks stay pending in the journal and a restarted
+        gateway sharing it redelivers them (at-least-once; an ack here
+        would journal unexecuted work as success and lose it forever)."""
+        while (spec := self.queue.get(lease_seconds=self.lease_seconds)) \
+                is not None:
+            if spec.task_id in self._aborted:   # expired lease, redelivered
+                continue
+            self._aborted.add(spec.task_id)
+            gwreq = self._by_task.get(spec.task_id)
+            if gwreq is None:                   # replayed, never dispatched
+                gwreq = self._adopt(spec)
+            if not gwreq.finished:
+                gwreq.stream.finish()
+                self.metrics.reject(gwreq.gid, status="failed")
+
+    # ---------------------------------------------------------------- run
+    def step(self) -> int:
+        """Dispatch ready work, decode one lockstep token on every healthy
+        replica, heartbeat leases, sample gauges. Returns the number of
+        requests still live (active anywhere + waiting in the queue)."""
+        self._dispatch_ready()
+        active = 0
+        for replica in self.replicas:
+            if not replica.healthy or not replica.engine.has_work():
+                continue
+            try:
+                active += replica.engine.step()
+            except Exception as err:        # noqa: BLE001 — fail forward
+                self._fail_replica(replica, err)
+        # heartbeat leases at lease_seconds/4 cadence, not every token —
+        # extend_lease takes the queue lock per call
+        now = time.perf_counter()
+        if self._inflight and \
+                now - self._last_heartbeat >= self.lease_seconds / 4:
+            self._last_heartbeat = now
+            for task_id in list(self._inflight):
+                self.queue.extend_lease(task_id, self.lease_seconds)
+        depth = self.queue.depth()
+        self.metrics.record_gauges(depth, active)
+        if not any(r.healthy for r in self.replicas):
+            self._abort_queued()
+            return 0
+        return active + depth + len(self._inflight)
+
+    def run(self) -> List[GatewayRequest]:
+        """Drive until every submitted request reaches a terminal state."""
+        while self.step() > 0:
+            pass
+        return [g for g in self._by_gid.values() if g.done]
+
+    def reap(self) -> List[GatewayRequest]:
+        """Release terminal requests from the gateway's maps and return
+        them. A long-lived frontend calls this after consuming results so
+        handle/telemetry retention stays bounded (aggregate counters —
+        completed/rejected/failed/retried — survive; the reaped requests'
+        per-request latency records do not feed later summary() calls).
+        Callers keep any handles they already hold."""
+        out = []
+        for gid, g in list(self._by_gid.items()):
+            if g.finished:
+                out.append(g)
+                del self._by_gid[gid]
+                self._by_task.pop(g.task_id, None)
+                self.metrics.requests.pop(gid, None)
+        return out
+
+    # ---------------------------------------------------------------- info
+    def requests(self) -> List[GatewayRequest]:
+        return list(self._by_gid.values())
+
+    def summary(self) -> dict:
+        return self.metrics.summary()

@@ -1,0 +1,168 @@
+"""Serving telemetry: per-request latency tracking + gateway-level gauges.
+
+Per request we record the queue/decode timeline (submit -> dispatch ->
+first token -> finish) from which TTFT, per-token latency, and tokens/sec
+derive. Per gateway step we sample queue depth and slot occupancy gauges.
+`summary()` reduces everything to the throughput/latency-percentile shape
+the paper's Fig 6/7 dashboards use; `core/reporting.py` renders it
+(`gateway_dashboard`) with the same ascii/markdown machinery as the
+training-sweep figures.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+def now() -> float:
+    return time.perf_counter()
+
+
+def percentile(xs: Sequence[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, float), p))
+
+
+@dataclass
+class RequestMetrics:
+    request_id: int
+    prompt_len: int = 0
+    submit_t: Optional[float] = None
+    dispatch_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    token_ts: List[float] = field(default_factory=list)
+    retries: int = 0
+    replica_id: Optional[int] = None
+    status: str = "queued"        # queued | running | done | rejected | failed
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token, measured from submit (includes queueing)."""
+        if self.first_token_t is None or self.submit_t is None:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def queue_wait(self) -> Optional[float]:
+        if self.dispatch_t is None or self.submit_t is None:
+            return None
+        return self.dispatch_t - self.submit_t
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.token_ts)
+
+    @property
+    def inter_token_latencies(self) -> List[float]:
+        return [b - a for a, b in zip(self.token_ts, self.token_ts[1:])]
+
+    @property
+    def tokens_per_sec(self) -> Optional[float]:
+        if self.finish_t is None or self.first_token_t is None:
+            return None
+        span = self.finish_t - self.first_token_t
+        if span <= 0 or self.n_tokens <= 1:
+            return None
+        return (self.n_tokens - 1) / span
+
+
+class GatewayMetrics:
+    """Collects RequestMetrics plus step-sampled gauges for one gateway."""
+
+    def __init__(self, total_slots: int = 0):
+        self.requests: Dict[int, RequestMetrics] = {}
+        self.total_slots = total_slots
+        # (t, queue_depth, active_slots) sampled once per gateway step
+        self.gauges: List[tuple] = []
+        self.dispatched = 0
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.retried = 0
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, request_id: int, prompt_len: int) -> RequestMetrics:
+        t = now()
+        if self._t0 is None:
+            self._t0 = t
+        m = RequestMetrics(request_id, prompt_len, submit_t=t)
+        self.requests[request_id] = m
+        return m
+
+    def dispatch(self, request_id: int, replica_id: int):
+        m = self.requests[request_id]
+        if m.dispatch_t is not None:          # re-dispatch after failure
+            m.retries += 1
+            self.retried += 1
+            m.token_ts.clear()
+            m.first_token_t = None
+        m.dispatch_t = now()
+        m.replica_id = replica_id
+        m.status = "running"
+        self.dispatched += 1
+
+    def token(self, request_id: int):
+        m = self.requests[request_id]
+        t = now()
+        if m.first_token_t is None:
+            m.first_token_t = t
+        m.token_ts.append(t)
+
+    def requeue(self, request_id: int):
+        """Replica failure sent the request back to the queue."""
+        self.requests[request_id].status = "queued"
+
+    def finish(self, request_id: int):
+        m = self.requests[request_id]
+        m.finish_t = now()
+        m.status = "done"
+        self.completed += 1
+
+    def reject(self, request_id: int, *, status: str = "rejected"):
+        m = self.requests[request_id]
+        m.finish_t = now()
+        m.status = status
+        if status == "rejected":
+            self.rejected += 1
+        else:
+            self.failed += 1
+
+    def record_gauges(self, queue_depth: int, active_slots: int):
+        self.gauges.append((now(), queue_depth, active_slots))
+
+    # ------------------------------------------------------------ reduction
+    def summary(self) -> dict:
+        done = [m for m in self.requests.values() if m.status == "done"]
+        ttfts = [m.ttft for m in done if m.ttft is not None]
+        itls = [lat for m in done for lat in m.inter_token_latencies]
+        total_tokens = sum(m.n_tokens for m in done)
+        t_end = max((m.finish_t for m in done), default=now())
+        duration = (t_end - self._t0) if self._t0 is not None else 0.0
+        util = ([a / self.total_slots for _, _, a in self.gauges]
+                if self.total_slots else [])
+        depths = [d for _, d, _ in self.gauges]
+        return {
+            "n_requests": len(self.requests),
+            "dispatched": self.dispatched,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "failed": self.failed,
+            "retried": self.retried,
+            "total_tokens": total_tokens,
+            "duration_s": duration,
+            "throughput_tok_s": total_tokens / duration if duration else 0.0,
+            "throughput_req_s": len(done) / duration if duration else 0.0,
+            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
+            "ttft_p90_ms": percentile(ttfts, 90) * 1e3,
+            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
+            "itl_p50_ms": percentile(itls, 50) * 1e3,
+            "itl_p99_ms": percentile(itls, 99) * 1e3,
+            "mean_queue_depth": float(np.mean(depths)) if depths else 0.0,
+            "mean_slot_utilization": float(np.mean(util)) if util else 0.0,
+        }

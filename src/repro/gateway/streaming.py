@@ -1,0 +1,76 @@
+"""Per-request token streams for the serving gateway.
+
+A TokenStream is the caller-facing view of one request's decode: tokens are
+pushed by the gateway as the engine emits them, and the caller consumes them
+either through an `on_token` callback (fires inline with the decode step) or
+by iterating. Iteration is pull-based: when the buffer is empty the stream
+invokes its `pump` (the gateway's `step`) to advance the engines until a new
+token lands or the request finishes — so `for tok in req.stream:` observes
+tokens as they decode rather than after `run()` returns.
+
+Delivery matches the queue tier's at-least-once semantics: if a replica
+fails mid-decode and the request is re-leased elsewhere, the stream is reset
+and the retry re-emits from the start of the output.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, List, Optional
+
+
+class TokenStream:
+    def __init__(self, pump: Optional[Callable[[], int]] = None,
+                 on_token: Optional[Callable[[int], None]] = None):
+        self._buf: deque = deque()
+        self._done = False
+        self._pump = pump
+        self._cb = on_token
+        self.callback_error: Optional[BaseException] = None
+
+    # ------------------------------------------------------- producer side
+    def push(self, tok: int):
+        self._buf.append(tok)
+        if self._cb:
+            try:
+                self._cb(tok)
+            except Exception as err:  # noqa: BLE001
+                # a client callback bug must not look like replica failure
+                # (it would poison every replica in turn as the request
+                # retries); disable the callback, keep the error and keep
+                # decoding — the buffered/iterator path still works
+                self.callback_error = err
+                self._cb = None
+
+    def finish(self):
+        self._done = True
+
+    def reset(self):
+        """Replica-failure retry: drop buffered-but-unread tokens; the
+        re-dispatched request will re-emit its stream from the start."""
+        self._buf.clear()
+
+    # ------------------------------------------------------- consumer side
+    @property
+    def finished(self) -> bool:
+        return self._done and not self._buf
+
+    def drain(self) -> List[int]:
+        """Non-blocking: all tokens buffered so far."""
+        out = list(self._buf)
+        self._buf.clear()
+        return out
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> int:
+        while not self._buf:
+            if self._done:
+                raise StopIteration
+            if self._pump is None:
+                raise StopIteration
+            if self._pump() <= 0 and not self._buf and not self._done:
+                raise RuntimeError(
+                    "TokenStream stalled: gateway made no progress but the "
+                    "request is not finished (rejected/dead-lettered?)")
+        return self._buf.popleft()

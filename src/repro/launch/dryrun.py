@@ -23,6 +23,7 @@ import jax
 from repro.configs import registry
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.shapes import SHAPES, make_case
+from repro.sharding import rules as R
 
 _DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
                 "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
@@ -62,12 +63,13 @@ def parse_collectives(hlo_text: str) -> dict:
 
 def _compile_case(cfg, shape_name, mesh, *, microbatches=None, remat=None):
     t0 = time.perf_counter()
-    with jax.sharding.set_mesh(mesh):
+    with R.mesh_context(mesh):
         case = make_case(cfg, shape_name, mesh, microbatches=microbatches,
                          remat=remat)
         jitted = jax.jit(case["fn"],
-                         in_shardings=case["in_specs"],
-                         out_shardings=case["out_specs"],
+                         in_shardings=R.as_shardings(mesh, case["in_specs"]),
+                         out_shardings=R.as_shardings(mesh,
+                                                      case["out_specs"]),
                          donate_argnums=case["donate"])
         lowered = jitted.lower(*case["args"])
         t_lower = time.perf_counter() - t0

@@ -1,5 +1,6 @@
-"""Serving launcher: batched requests against a (reduced) model with the
-continuous-batching engine."""
+"""Serving launcher: batched requests against a (reduced) model through the
+queue-backed gateway — replica dispatch policies, per-request sampling,
+optional token streaming, and a Fig 6/7-shaped telemetry dashboard."""
 from __future__ import annotations
 
 import argparse
@@ -8,8 +9,10 @@ import time
 import jax
 
 from repro.configs import registry
+from repro.core import reporting
+from repro.gateway.gateway import POLICIES, Gateway
+from repro.gateway.sampler import SamplingParams
 from repro.models import transformer as T
-from repro.serve.engine import ServeEngine
 
 
 def main():
@@ -17,8 +20,22 @@ def main():
     ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--policy", default="round-robin",
+                    choices=sorted(POLICIES))
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base sampling seed; request i uses seed+i")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they decode")
+    ap.add_argument("--journal", default=None,
+                    help="optional TaskQueue journal path (durable intake)")
+    ap.add_argument("--dashboard", action="store_true",
+                    help="print the full queue/slot dashboard after the run")
     args = ap.parse_args()
 
     cfg = registry.get(args.arch, reduced=True)
@@ -26,20 +43,37 @@ def main():
         raise SystemExit("serve launcher drives decoder-only archs; "
                          "enc-dec serving goes through serve/step.py")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(params, cfg, batch_slots=args.slots,
-                      cache_len=args.cache_len)
+    gw = Gateway.build(params, cfg, replicas=args.replicas,
+                       batch_slots=args.slots, cache_len=args.cache_len,
+                       policy=args.policy, journal_path=args.journal)
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
                for i in range(args.requests)]
-    for p in prompts:
-        eng.submit(p, max_new_tokens=args.max_new)
+    reqs = []
+    for i, p in enumerate(prompts):
+        sampling = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=None if args.seed is None else args.seed + i)
+        on_token = ((lambda tok, rid=i: print(f"  req{rid} += {tok}"))
+                    if args.stream else None)
+        reqs.append(gw.submit(p, max_new_tokens=args.max_new,
+                              sampling=sampling, on_token=on_token))
     t0 = time.perf_counter()
-    done = eng.run()
+    done = gw.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks / dt:.1f} tok/s, {args.slots} slots)")
+          f"({toks / dt:.1f} tok/s, {args.replicas}x{args.slots} slots, "
+          f"policy={args.policy})")
     for r in done[:4]:
-        print(f"  req{r.request_id}: prompt={r.prompt} -> {r.output}")
+        print(f"  req{r.gid} (replica {r.replica_id}): "
+              f"prompt={r.prompt} -> {r.output}")
+    s = gw.summary()
+    print(f"[serve] ttft p50={s['ttft_p50_ms']:.1f}ms "
+          f"p99={s['ttft_p99_ms']:.1f}ms  "
+          f"itl p50={s['itl_p50_ms']:.2f}ms  "
+          f"util={s['mean_slot_utilization']:.2f}")
+    if args.dashboard:
+        print(reporting.gateway_dashboard(s, gw.metrics.gauges))
 
 
 if __name__ == "__main__":

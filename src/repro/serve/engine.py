@@ -8,17 +8,25 @@ requests are admitted — continuous batching. This is the paper's "task
 execution" stage re-shaped for inference: the slot pool is the worker pool,
 admission is the queue pull, and a finished request "fails forward" without
 disturbing its batch peers.
+
+The jitted step returns last-position logits (not an argmax'd token): each
+request carries its own `Sampler`, so slots in one lockstep batch can decode
+greedy, temperature, top-k/top-p with independent seeded PRNG streams. The
+engine also exposes event hooks (`on_token`, `on_finish`) that the gateway
+tier uses for streaming and telemetry; they default to None and cost
+nothing when unused.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as T
+from repro.serve.sampler import GREEDY, Sampler, SamplingParams
 from repro.serve.step import build_decode
 
 
@@ -28,8 +36,16 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    sampling: SamplingParams = GREEDY
     output: List[int] = field(default_factory=list)
     done: bool = False
+    error: Optional[BaseException] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self._sampler = Sampler(self.sampling)
+
+    def next_token(self, logits) -> int:
+        return self._sampler.sample(logits)
 
 
 class ServeEngine:
@@ -49,23 +65,54 @@ class ServeEngine:
         self.pos = np.full((batch_slots,), -1, np.int64)   # last written pos
         self.budget = np.zeros((batch_slots,), np.int64)
         self.active: List[Optional[Request]] = [None] * batch_slots
-        self._decode = jax.jit(build_decode(cfg, window=window))
+        # two decode variants: the in-jit argmax one keeps the all-greedy
+        # hot path transferring one int per slot; the logits one (compiled
+        # lazily, on first use) feeds host-side per-request sampling
+        self._decode_tok = jax.jit(build_decode(cfg, window=window))
+        self._decode_lg = jax.jit(build_decode(cfg, window=window,
+                                               return_logits=True))
         self.prefill_mode = prefill_mode
         if prefill_mode == "bulk":
             from repro.serve.step import build_prefill
-            self._prefill = jax.jit(build_prefill(cfg, window=window))
+            self._prefill_tok = jax.jit(build_prefill(cfg, window=window))
+            self._prefill_lg = jax.jit(build_prefill(cfg, window=window,
+                                                     return_logits=True))
         self._pending: List[Request] = []
-        self._all: List[Request] = []
+        self._finished: List[Request] = []
+        # long-lived frontends (the gateway) keep their own handles; set
+        # False so finished requests are not retained engine-side forever
+        self.retain_finished = True
         self._next_id = 0
+        # gateway event hooks: fn(req, ...) or None
+        self.on_token: Optional[Callable[[Request, int], None]] = None
+        self.on_finish: Optional[Callable[[Request], None]] = None
 
     # ------------------------------------------------------------- intake
     def submit(self, prompt: List[int], max_new_tokens: int = 16,
-               eos_id: Optional[int] = None) -> Request:
-        req = Request(self._next_id, list(prompt), max_new_tokens, eos_id)
+               eos_id: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None) -> Request:
+        req = Request(self._next_id, list(prompt), max_new_tokens, eos_id,
+                      sampling or GREEDY)
         self._next_id += 1
+        return self.enqueue(req)
+
+    def enqueue(self, req: Request) -> Request:
+        """Admit an externally-built Request (the gateway constructs its own
+        so ids and samplers survive cross-replica retries)."""
         self._pending.append(req)
-        self._all.append(req)
         return req
+
+    def free_slots(self) -> int:
+        return sum(1 for a in self.active if a is None) - len(self._pending)
+
+    def active_count(self) -> int:
+        return sum(1 for a in self.active if a is not None)
+
+    def pending_count(self) -> int:
+        return len(self._pending)
+
+    def has_work(self) -> bool:
+        return bool(self._pending) or self.active_count() > 0
 
     # ------------------------------------------------------------- internals
     def _admit(self):
@@ -75,32 +122,64 @@ class ServeEngine:
                 self.active[slot] = req
                 self._prefill_slot(slot, req)
 
+    def _emit(self, req: Request, tok: int):
+        req.output.append(tok)
+        if self.on_token:
+            self.on_token(req, tok)
+
+    def _sample_safe(self, req: Request, logits_row):
+        """Host-side sampling is request-scoped: bad SamplingParams or NaN
+        logits must fail only this request, never the whole replica (one
+        poison request would otherwise disable the fleet). Returns the
+        token, or the exception after recording it on the request."""
+        try:
+            return req.next_token(logits_row)
+        except Exception as err:  # noqa: BLE001
+            req.error = err
+            return err
+
     def _prefill_slot(self, slot: int, req: Request):
         """Fill this slot's cache from the prompt, merging only this slot's
         rows so peers are untouched."""
-        if self.prefill_mode == "bulk":
-            last = self._bulk_prefill_slot(slot, req)
+        greedy = req.sampling.is_greedy
+        if not req.prompt:
+            # degenerate empty prompt: nothing to condition on; argmax of a
+            # zero logits row (token 0), matching the old engine
+            first = 0 if greedy else self._sample_safe(
+                req, np.zeros((self.cfg.vocab_size,), np.float32))
+        elif self.prefill_mode == "bulk":
+            first = self._bulk_prefill_slot(slot, req)
         else:
-            last = 0
+            decode = self._decode_tok if greedy else self._decode_lg
             for t, tok in enumerate(req.prompt):
                 toks = jnp.zeros((self.slots, 1), jnp.int32) \
                     .at[slot, 0].set(tok)
                 pos = jnp.zeros((self.slots,), jnp.int32).at[slot].set(t)
-                nxt, cache = self._decode(self.params, toks, pos, self.cache)
+                out, cache = decode(self.params, toks, pos, self.cache)
                 self.cache = _merge_slot(self.cache, cache, slot)
-                last = int(nxt[slot])
+            first = int(out[slot]) if greedy else \
+                self._sample_safe(req, np.asarray(out[slot]))
         self.pos[slot] = len(req.prompt) - 1
-        req.output.append(last)               # first token comes from prefill
+        if isinstance(first, Exception):        # request-scoped sampling bug
+            self.budget[slot] = 0
+            self._retire(slot)
+            return
+        hit_eos = req.eos_id is not None and first == req.eos_id
+        if not hit_eos:
+            self._emit(req, first)
         self.budget[slot] = req.max_new_tokens - 1
-        if self.budget[slot] <= 0:
+        if hit_eos or self.budget[slot] <= 0:
             self._retire(slot)
 
     def _bulk_prefill_slot(self, slot: int, req: Request) -> int:
         """One full-sequence prefill forward; natural-length caches are
-        copied into this slot of the fixed decode cache."""
+        copied into this slot of the fixed decode cache. Returns the
+        request's first generated token."""
         from repro.serve.step import prefill_into_cache
+        greedy = req.sampling.is_greedy
+        prefill = self._prefill_tok if greedy else self._prefill_lg
         toks = jnp.asarray([req.prompt], jnp.int32)             # (1, Sp)
-        nxt, nat = self._prefill(self.params, {"tokens": toks})
+        out, nat = prefill(self.params, {"tokens": toks})
         slot_cache = T.init_cache(self.cfg, 1, self.cache_len)
         slot_cache = prefill_into_cache(self.cfg, nat, slot_cache,
                                         jnp.asarray([len(req.prompt)]))
@@ -119,12 +198,18 @@ class ServeEngine:
         merged["tail"] = jax.tree.map(lambda f, o: write(f, o, 0),
                                       self.cache["tail"], slot_cache["tail"])
         self.cache = merged
-        return int(nxt[0])
+        return int(out[0]) if greedy else \
+            self._sample_safe(req, np.asarray(out[0]))
 
     def _retire(self, slot: int):
-        self.active[slot].done = True
+        req = self.active[slot]
+        req.done = True
         self.active[slot] = None
         self.pos[slot] = -1
+        if self.retain_finished:
+            self._finished.append(req)
+        if self.on_finish:
+            self.on_finish(req)
 
     # ------------------------------------------------------------- run
     def step(self) -> int:
@@ -137,26 +222,58 @@ class ServeEngine:
         for s in live:
             toks[s, 0] = self.active[s].output[-1]
         pos = np.maximum(self.pos + 1, 0).astype(np.int32)
-        nxt, new_cache = self._decode(self.params, jnp.asarray(toks),
-                                      jnp.asarray(pos), self.cache)
+        greedy_batch = all(self.active[s].sampling.is_greedy for s in live)
+        decode = self._decode_tok if greedy_batch else self._decode_lg
+        out, new_cache = decode(self.params, jnp.asarray(toks),
+                                jnp.asarray(pos), self.cache)
         self.cache = _merge_slots(self.cache, new_cache, live)
-        nxt = np.asarray(nxt)
+        out = np.asarray(out)
         for s in live:
             req = self.active[s]
             self.pos[s] += 1
             self.budget[s] -= 1
-            tok = int(nxt[s])
+            tok = int(out[s]) if greedy_batch else \
+                self._sample_safe(req, out[s])
+            if isinstance(tok, Exception):
+                self.budget[s] = 0
+                self._retire(s)
+                continue
             hit_eos = req.eos_id is not None and tok == req.eos_id
             if not hit_eos:
-                req.output.append(tok)
+                self._emit(req, tok)
             if hit_eos or self.budget[s] <= 0:
                 self._retire(s)
         return len(live)
 
     def run(self) -> List[Request]:
-        while self._pending or any(a is not None for a in self.active):
-            self.step()
-        return [r for r in self._all if r.done]
+        """Drive to completion and return finished requests. Works even on
+        an engine whose frontend disabled retain_finished (requests that
+        finish inside this call are tracked and returned either way)."""
+        retain, self.retain_finished = self.retain_finished, True
+        start = len(self._finished)
+        try:
+            while self._pending or any(a is not None for a in self.active):
+                self.step()
+        finally:
+            self.retain_finished = retain
+        if retain:
+            return list(self._finished)
+        done, self._finished[start:] = self._finished[start:], []
+        return done
+
+    def evict(self, req: Request) -> bool:
+        """Drop a request from this engine (pending or mid-decode) without
+        marking it done — the gateway uses this when re-dispatching leased
+        work away from a failed replica. Returns True if found."""
+        if req in self._pending:
+            self._pending.remove(req)
+            return True
+        for slot in range(self.slots):
+            if self.active[slot] is req:
+                self.active[slot] = None
+                self.pos[slot] = -1
+                return True
+        return False
 
 
 def _take_rows(o, n, slots, axis):

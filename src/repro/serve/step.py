@@ -14,19 +14,26 @@ import jax.numpy as jnp
 from repro.models import transformer as T
 
 
-def build_prefill(cfg, *, window=None):
+def build_prefill(cfg, *, window=None, return_logits: bool = False):
+    """return_logits=False: (greedy next token, caches) — the historical
+    shape used by the dry-run lowering. return_logits=True: (last-position
+    logits, caches) so the caller can apply per-request sampling."""
     def prefill(params, batch):
         logits, caches = T.forward_prefill(params, cfg, batch, window=window)
+        if return_logits:
+            return logits[:, -1, :], caches
         # greedy next token from the last position
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, caches
     return prefill
 
 
-def build_decode(cfg, *, window=None):
+def build_decode(cfg, *, window=None, return_logits: bool = False):
     def decode(params, tokens, pos, cache):
         logits, cache = T.decode_step(params, cfg, tokens, pos, cache,
                                       window=window)
+        if return_logits:
+            return logits[:, -1, :], cache
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, cache
     return decode

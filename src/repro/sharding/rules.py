@@ -22,6 +22,24 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # -------------------------------------------------------------- mesh helpers
 
+def mesh_context(mesh: Mesh):
+    """Ambient-mesh context manager across jax versions:
+    `jax.sharding.set_mesh` where it exists (newer jax), else the legacy
+    `with mesh:` — both make `mesh` ambient for the enclosed computation."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+def as_shardings(mesh: Mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree for jit in/out_shardings.
+    Newer jax resolves bare PartitionSpecs against the ambient mesh; older
+    jax requires concrete Shardings — explicit conversion works on both.
+    None leaves (unspecified/auto) pass through."""
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        tree, is_leaf=lambda x: x is None or isinstance(x, P))
+
+
 def mesh_axis_size(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 

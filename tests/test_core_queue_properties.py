@@ -1,0 +1,50 @@
+"""Hypothesis property tests for TaskQueue delivery and shape signatures.
+
+Kept separate from test_core_queue.py so the deterministic queue tests run
+even where hypothesis is not installed (pytest.importorskip skips only this
+module).
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.queue import TaskQueue  # noqa: E402
+from repro.core.tasks import TaskSpec, shape_signature  # noqa: E402
+
+
+def _spec(i, prio=0, retries=1, sess="s"):
+    return TaskSpec(task_id=f"t{i}", session_id=sess, kind="k",
+                    payload={"i": i}, priority=prio, max_retries=retries)
+
+
+@given(st.lists(st.integers(min_value=0, max_value=5), min_size=1,
+                max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_property_all_tasks_delivered_exactly_once_when_acked(prios):
+    q = TaskQueue()
+    for i, p in enumerate(prios):
+        q.put(_spec(i, prio=p))
+    seen = []
+    while (s := q.get()) is not None:
+        seen.append(s.task_id)
+        q.ack(s.task_id)
+    assert sorted(seen) == sorted(f"t{i}" for i in range(len(prios)))
+    # non-increasing priority order
+    by_id = {f"t{i}": p for i, p in enumerate(prios)}
+    deliv = [by_id[t] for t in seen]
+    assert deliv == sorted(deliv, reverse=True)
+
+
+@given(st.dictionaries(st.sampled_from(["hidden_sizes", "lr", "seed",
+                                        "activations"]),
+                       st.integers(0, 3), min_size=0, max_size=4))
+@settings(max_examples=30, deadline=None)
+def test_shape_signature_ignores_lr_and_seed(payload):
+    base = dict(payload)
+    a = dict(base, lr=0.1, seed=1)
+    b = dict(base, lr=0.2, seed=2)
+    assert shape_signature(a) == shape_signature(b)
+    c = dict(base, hidden_sizes=[999])
+    if base.get("hidden_sizes") != [999]:
+        assert shape_signature(c) != shape_signature(dict(base))

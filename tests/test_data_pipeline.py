@@ -3,7 +3,8 @@
 CSV structural-error semantics."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.data import pipeline, synthetic
 

@@ -3,7 +3,7 @@ label smoothing, vocab padding interaction."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.train.losses import softmax_xent
 
