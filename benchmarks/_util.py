@@ -1,0 +1,45 @@
+"""Shared benchmark plumbing: machine-readable result files.
+
+Each benchmark that matters for the perf trajectory dumps a
+``BENCH_<name>.json`` at the repo root (committed alongside code changes),
+so regressions are diffable across PRs instead of living only in terminal
+scrollback. The schema is deliberately flat: {"meta": {...}, "rows": [...]}
+with one row per swept cell.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import time
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(name: str, rows: list, meta: dict | None = None,
+                     smoke: bool = False) -> Path:
+    """Write BENCH_<name>.json at the repo root. `rows` is a list of flat
+    dicts (one per benchmark cell); `meta` records the sweep's shape knobs.
+    Smoke runs land in a separate BENCH_<name>.smoke.json so the CI
+    bit-rot check can never clobber the committed full-run trajectory."""
+    payload = {
+        "bench": name,
+        "smoke": smoke,
+        "meta": dict(meta or {}),
+        "recorded_unix": int(time.time()),
+        "platform": platform.platform(),
+        "rows": rows,
+    }
+    suffix = ".smoke.json" if smoke else ".json"
+    path = REPO_ROOT / f"BENCH_{name}{suffix}"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def smoke_requested() -> bool:
+    """Modules invoked outside benchmarks.run can opt into tiny shapes via
+    the environment (the CI smoke job exports this)."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")

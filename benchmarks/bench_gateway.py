@@ -1,15 +1,20 @@
 """Gateway benchmark: offered-load sweep over dispatch policies.
 
-For each policy (round-robin, least-loaded) and each offered load, publish
-the whole batch of prompts up front (closed-loop worst case: the queue holds
-the backlog), drive the gateway to completion, and report decode throughput
-plus TTFT percentiles from the gateway's own telemetry. Engines are reused
-across cells so jit compilation is paid once, not per cell.
+For each policy and each offered load, publish the whole batch of prompts
+up front (closed-loop worst case: the queue holds the backlog), drive the
+gateway to completion, and report decode throughput plus TTFT percentiles
+from the gateway's own telemetry. Engines are reused across cells so jit
+compilation is paid once, not per cell. A prefix-affinity cell over paged
+replicas exercises the radix-routed cache path under load.
+
+Summaries are also written to BENCH_gateway.json at the repo root so the
+perf trajectory is recorded in-tree, not just printed.
 """
 from __future__ import annotations
 
 import jax
 
+from benchmarks._util import smoke_requested, write_bench_json
 from repro.configs import registry
 from repro.gateway.gateway import Gateway
 from repro.gateway.sampler import SamplingParams
@@ -21,7 +26,21 @@ LOADS = (4, 12)            # offered requests per run (2 replicas x 2 slots)
 REPLICAS, SLOTS, MAX_NEW = 2, 2, 8
 
 
-def run() -> list:
+def _summaries_to_rows(cell, n, done, s, kv=None):
+    row = {"cell": cell, "offered": n, "completed": len(done)}
+    row.update({k: s[k] for k in
+                ("throughput_tok_s", "throughput_req_s", "total_tokens",
+                 "duration_s", "ttft_p50_ms", "ttft_p99_ms", "itl_p50_ms",
+                 "mean_queue_depth", "mean_slot_utilization")})
+    if kv:
+        row.update({f"kv_{k}": v for k, v in kv.items()})
+    return row
+
+
+def run(smoke: bool = False) -> list:
+    smoke = smoke or smoke_requested()
+    loads = (3,) if smoke else LOADS
+    max_new = 4 if smoke else MAX_NEW
     cfg = registry.get("qwen3-1.7b", reduced=True)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     engines = [ServeEngine(params, cfg, batch_slots=SLOTS, cache_len=64)
@@ -37,24 +56,52 @@ def run() -> list:
         eng.submit([1, 2, 3], max_new_tokens=2,
                    sampling=SamplingParams(temperature=0.7, seed=0))
         eng.run()
-    out = []
+    out, json_rows = [], []
     for policy in POLICIES:
-        for n in LOADS:
+        for n in loads:
             gw = Gateway(engines, policy=policy)
             for i in range(n):
                 gw.submit([(5 * i + j) % cfg.vocab_size
                            for j in range(3 + i % 3)],
-                          max_new_tokens=MAX_NEW,
+                          max_new_tokens=max_new,
                           sampling=SamplingParams(temperature=0.7, seed=i))
             done = gw.run()
             s = gw.summary()
             toks = s["total_tokens"]
             us = s["duration_s"] / max(toks, 1) * 1e6
-            out.append((
-                f"gateway_{policy.replace('-', '_')}_load{n}", us,
+            cell = f"gateway_{policy.replace('-', '_')}_load{n}"
+            out.append((cell, us,
+                        f"{s['throughput_tok_s']:.1f} tok/s "
+                        f"ttft p50 {s['ttft_p50_ms']:.1f}ms "
+                        f"p99 {s['ttft_p99_ms']:.1f}ms "
+                        f"util {s['mean_slot_utilization']:.2f} "
+                        f"{len(done)}/{n} reqs"))
+            json_rows.append(_summaries_to_rows(cell, n, done, s))
+    # prefix-affinity over paged replicas: routing consults the radix index,
+    # so the shared-prefix load should land where its KV already lives
+    paged = [ServeEngine(params, cfg, batch_slots=SLOTS, cache_len=64,
+                         kv_layout="paged", block_size=8)
+             for _ in range(REPLICAS)]
+    for eng in paged:
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run()
+    n = loads[-1]
+    gw = Gateway(paged, policy="prefix-affinity")
+    prefix = [(3 * j + 1) % cfg.vocab_size for j in range(16)]
+    for i in range(n):
+        gw.submit(prefix + [(11 * i + j) % cfg.vocab_size for j in range(2)],
+                  max_new_tokens=max_new)
+    done = gw.run()
+    s, kv = gw.summary(), gw.kvcache_summary()
+    cell = f"gateway_prefix_affinity_paged_load{n}"
+    out.append((cell, s["duration_s"] / max(s["total_tokens"], 1) * 1e6,
                 f"{s['throughput_tok_s']:.1f} tok/s "
-                f"ttft p50 {s['ttft_p50_ms']:.1f}ms "
-                f"p99 {s['ttft_p99_ms']:.1f}ms "
-                f"util {s['mean_slot_utilization']:.2f} "
+                f"kv hit_rate {kv['hit_rate']:.2f} "
+                f"reused {kv['tokens_reused']} tok "
                 f"{len(done)}/{n} reqs"))
+    json_rows.append(_summaries_to_rows(cell, n, done, s, kv))
+    write_bench_json("gateway", json_rows,
+                     meta={"replicas": REPLICAS, "slots": SLOTS,
+                           "max_new": max_new, "arch": cfg.arch_id},
+                     smoke=smoke)
     return out

@@ -26,9 +26,9 @@ def _timeit(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     key = jax.random.PRNGKey(0)
-    b, s, h, p, n = 2, 512, 4, 64, 64
+    b, s, h, p, n = (1, 128, 2, 32, 32) if smoke else (2, 512, 4, 64, 64)
     ks = jax.random.split(key, 5)
     x = jax.random.normal(ks[0], (b, s, h, p))
     dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1

@@ -15,13 +15,14 @@ from repro.data import pipeline, synthetic
 K = 16  # homogeneous tasks
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    k = 4 if smoke else K
     tmp = tempfile.mkdtemp()
-    csv = synthetic.classification_csv(800, 8, 3, seed=3)
+    csv = synthetic.classification_csv(300 if smoke else 800, 8, 3, seed=3)
     ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
     space = SearchSpace(hidden_layer_counts=(2,), hidden_widths=(32,),
-                        learning_rates=(1e-3,), epochs=2, batch_size=128,
-                        seeds=tuple(range(K)))
+                        learning_rates=(1e-3,), epochs=1 if smoke else 2,
+                        batch_size=128, seeds=tuple(range(k)))
 
     # queue plane
     q = TaskQueue()
@@ -42,8 +43,8 @@ def run() -> list:
     t_pop = time.perf_counter() - t0
 
     return [
-        ("pop_queue_plane", t_queue / K * 1e6, f"{K / t_queue:.2f} tasks/s"),
-        ("pop_population_plane", t_pop / K * 1e6, f"{K / t_pop:.2f} tasks/s"),
+        ("pop_queue_plane", t_queue / k * 1e6, f"{k / t_queue:.2f} tasks/s"),
+        ("pop_population_plane", t_pop / k * 1e6, f"{k / t_pop:.2f} tasks/s"),
         ("pop_speedup", t_queue / t_pop,
          "x (single host; scales with chips on a mesh)"),
     ]

@@ -13,16 +13,17 @@ from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    n_req, max_new = (3, 3) if smoke else (8, 8)
     cfg = registry.get("qwen3-1.7b", reduced=True)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     out = []
     for mode in ("decode", "bulk"):
         eng = ServeEngine(params, cfg, batch_slots=4, cache_len=128,
                           prefill_mode=mode)
-        for i in range(8):
+        for i in range(n_req):
             eng.submit([(3 * i + j) % cfg.vocab_size for j in range(4)],
-                       max_new_tokens=8)
+                       max_new_tokens=max_new)
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0

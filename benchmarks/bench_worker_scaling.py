@@ -13,12 +13,12 @@ from repro.core.sweep import SearchSpace
 from repro.data import pipeline, synthetic
 
 
-def run() -> list:
-    csv = synthetic.classification_csv(400, 8, 3, seed=9)
+def run(smoke: bool = False) -> list:
+    csv = synthetic.classification_csv(200 if smoke else 400, 8, 3, seed=9)
     ds = pipeline.prepare(csv, "label")
     out = []
     base = None
-    for n in (1, 2, 4):
+    for n in (1, 2) if smoke else (1, 2, 4):
         tmp = tempfile.mkdtemp()
         q = TaskQueue(os.path.join(tmp, "q.journal"))
         rs = ResultStore(os.path.join(tmp, "r.jsonl"))

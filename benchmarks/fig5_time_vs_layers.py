@@ -19,16 +19,19 @@ LAYER_COUNTS = (1, 2, 3, 4, 5)
 WIDTH = 512
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    layers, epochs, rows_n, seeds = (LAYER_COUNTS, 4, 2400, (0, 1))
+    if smoke:
+        layers, epochs, rows_n, seeds = ((1, 2), 1, 400, (0,))
     tmp = tempfile.mkdtemp()
     q = TaskQueue(os.path.join(tmp, "q.journal"))
     rs = ResultStore(os.path.join(tmp, "r.jsonl"))
     sess = Session(q, rs)
-    csv = synthetic.classification_csv(2400, 12, 4, seed=5)
+    csv = synthetic.classification_csv(rows_n, 12, 4, seed=5)
     ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
-    space = SearchSpace(hidden_layer_counts=LAYER_COUNTS,
+    space = SearchSpace(hidden_layer_counts=layers,
                         hidden_widths=(WIDTH,), activation_sets=(("relu",),),
-                        epochs=4, batch_size=128, seeds=(0, 1))
+                        epochs=epochs, batch_size=128, seeds=seeds)
     q.put_many(space.tasks(sess.session_id))
     Worker("w0", q, rs, ctx).run_until_empty()
     # steady-state epoch time (jit compilation excluded) — the compute cost

@@ -16,17 +16,18 @@ from repro.core.tasks import TaskSpec
 N_JOBS = 20_000
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    n_jobs = 1000 if smoke else N_JOBS
     tmp = tempfile.mkdtemp()
     path = os.path.join(tmp, "fig6.journal")
     q = TaskQueue(path)
     specs = [TaskSpec(task_id=f"j{i}", session_id="fig6", kind="dnn_train",
                       payload={"hidden_sizes": [64], "i": i})
-             for i in range(N_JOBS)]
+             for i in range(n_jobs)]
     t0 = time.perf_counter()
     q.put_many(specs)
     t_put = time.perf_counter() - t0
-    assert q.depth() == N_JOBS
+    assert q.depth() == n_jobs
 
     t0 = time.perf_counter()
     n = 0
@@ -34,17 +35,17 @@ def run() -> list:
         q.ack(s.task_id)
         n += 1
     t_drain = time.perf_counter() - t0
-    assert n == N_JOBS
+    assert n == n_jobs
     q.close()
 
     t0 = time.perf_counter()
     q2 = TaskQueue(path)                      # journal replay (recovery)
     t_replay = time.perf_counter() - t0
-    assert q2.depth() == 0 and q2.stats()["acked"] == N_JOBS
+    assert q2.depth() == 0 and q2.stats()["acked"] == n_jobs
 
     return [
-        ("fig6_enqueue", t_put / N_JOBS * 1e6, f"{N_JOBS / t_put:.0f} jobs/s"),
-        ("fig6_drain", t_drain / N_JOBS * 1e6, f"{N_JOBS / t_drain:.0f} jobs/s"),
+        ("fig6_enqueue", t_put / n_jobs * 1e6, f"{n_jobs / t_put:.0f} jobs/s"),
+        ("fig6_drain", t_drain / n_jobs * 1e6, f"{n_jobs / t_drain:.0f} jobs/s"),
         ("fig6_journal_replay", t_replay * 1e6,
-         f"{N_JOBS}-job journal in {t_replay:.2f}s"),
+         f"{n_jobs}-job journal in {t_replay:.2f}s"),
     ]

@@ -18,14 +18,15 @@ from repro.data import pipeline, synthetic
 N_WORKERS = 4
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
     tmp = tempfile.mkdtemp()
     q = TaskQueue(os.path.join(tmp, "q.journal"))
     rs = ResultStore(os.path.join(tmp, "r.jsonl"))
     sess = Session(q, rs)
-    csv = synthetic.classification_csv(600, 8, 3, seed=7)
+    csv = synthetic.classification_csv(300 if smoke else 600, 8, 3, seed=7)
     ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
-    space = SearchSpace(hidden_layer_counts=(1, 2), hidden_widths=(16, 32),
+    space = SearchSpace(hidden_layer_counts=(1,) if smoke else (1, 2),
+                        hidden_widths=(16,) if smoke else (16, 32),
                         epochs=1, batch_size=128)
     tasks = space.tasks(sess.session_id)
     tasks += [TaskSpec.make(sess.session_id, "dnn_train",

@@ -1,11 +1,17 @@
 """Benchmark harness — one module per paper table/figure plus the roofline
 and beyond-paper comparisons. Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...] [--smoke]
+
+``--smoke`` runs every target with tiny shapes (and exports
+REPRO_BENCH_SMOKE=1 for modules that read it) — the CI benchmarks job uses
+this to catch bit-rot on every PR without paying full sweep time.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
+import os
 import sys
 import time
 
@@ -18,6 +24,7 @@ MODULES = [
     ("workers", "benchmarks.bench_worker_scaling"),
     ("serving", "benchmarks.bench_serving"),
     ("gateway", "benchmarks.bench_gateway"),
+    ("kvcache", "benchmarks.bench_kvcache"),
     ("kernels", "benchmarks.bench_kernels"),
     ("roofline", "benchmarks.roofline"),
 ]
@@ -28,8 +35,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated keys: " +
                     ",".join(k for k, _ in MODULES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for every target (CI bit-rot check)")
     args = ap.parse_args()
     keys = set(args.only.split(",")) if args.only else None
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     print("name,us_per_call,derived")
     failures = 0
@@ -39,7 +50,11 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod = __import__(modname, fromlist=["run"])
-            rows = mod.run()
+            kwargs = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
             for name, us, derived in rows:
                 print(f"{name},{us:.2f},{derived}")
         except Exception as e:  # noqa: BLE001 — report and continue (fail forward)

@@ -26,19 +26,23 @@ WIDTHS = (2, 4, 8, 16, 64, 128)
 ACTS = (("relu",), ("tanh",), ("sigmoid",), ("relu", "tanh"))
 
 
-def run() -> list:
+def run(smoke: bool = False) -> list:
+    widths = (2, 16, 64) if smoke else WIDTHS
+    acts = ACTS[:2] if smoke else ACTS
+    epochs = 1 if smoke else 4
+    seeds = (0, 1) if smoke else (0, 1, 2, 3)
     tmp = tempfile.mkdtemp()
     rs = ResultStore(os.path.join(tmp, "r.jsonl"))
     sess = Session(TaskQueue(), rs)
-    csv = synthetic.classification_csv(1500, 12, 4, seed=11)
+    csv = synthetic.classification_csv(500 if smoke else 1500, 12, 4, seed=11)
     ctx = {"datasets": {"default": pipeline.prepare(csv, "label")}}
 
     # --- F1: capacity sweep (seeds give population blocks of 4) ---
     tasks = []
-    for w in WIDTHS:
+    for w in widths:
         space = SearchSpace(hidden_layer_counts=(2,), hidden_widths=(w,),
-                            learning_rates=(3e-3,), epochs=4, batch_size=128,
-                            seeds=(0, 1, 2, 3))
+                            learning_rates=(3e-3,), epochs=epochs,
+                            batch_size=128, seeds=seeds)
         tasks += space.tasks(sess.session_id)
     plan = plan_sweep(tasks, min_block=2)
     for block in plan.population_blocks:
@@ -54,10 +58,11 @@ def run() -> list:
     # --- F3: activation comparison at fixed capacity ---
     sess2 = Session(TaskQueue(), rs)
     tasks = []
-    for acts in ACTS:
+    for act_set in acts:
         space = SearchSpace(hidden_layer_counts=(2,), hidden_widths=(32,),
-                            activation_sets=(acts,), learning_rates=(3e-3,),
-                            epochs=4, batch_size=128, seeds=(0, 1, 2, 3))
+                            activation_sets=(act_set,),
+                            learning_rates=(3e-3,), epochs=epochs,
+                            batch_size=128, seeds=seeds)
         tasks += space.tasks(sess2.session_id)
     for block in plan_sweep(tasks, min_block=2).population_blocks:
         train_population(block, ctx, results=rs)

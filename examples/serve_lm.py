@@ -25,6 +25,15 @@ def main():
     ap.add_argument("--top-k", type=int, default=8)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="'paged' turns on the block-pool KV cache with "
+                    "radix-tree prefix reuse (pure-attention archs); pair "
+                    "with --policy prefix-affinity to see routing follow "
+                    "the cache")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--admit-budget", type=int, default=None,
+                    help="token-budget admission control (429 rejects)")
     ap.add_argument("--stream", action="store_true", default=True,
                     help="print tokens as they decode (default on)")
     ap.add_argument("--no-stream", dest="stream", action="store_false")
@@ -40,7 +49,11 @@ def main():
             "--temperature", str(args.temperature),
             "--top-k", str(args.top_k),
             "--top-p", str(args.top_p),
-            "--seed", str(args.seed)]
+            "--seed", str(args.seed),
+            "--kv-layout", args.kv_layout,
+            "--block-size", str(args.block_size)]
+    if args.admit_budget is not None:
+        argv += ["--admit-budget", str(args.admit_budget)]
     if args.dashboard:
         argv.append("--dashboard")
     if args.stream:

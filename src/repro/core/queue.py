@@ -34,6 +34,11 @@ class TaskQueue:
         self._seq = itertools.count()
         self._tasks: Dict[str, TaskSpec] = {}
         self._leased: Dict[str, float] = {}            # id -> deadline
+        self._leased_seq: Dict[str, int] = {}          # id -> heap seq held
+        # ids get() would actually deliver, maintained incrementally so
+        # depth()/stats() are O(1) — the gateway polls depth every decode
+        # step, and a set-scan over a deep backlog made that O(n) per token
+        self._pending_ids: set = set()
         self._retries: Dict[str, int] = {}
         self._dead: List[str] = []
         self._acked: set = set()
@@ -74,6 +79,7 @@ class TaskQueue:
         gone = self._acked | set(self._dead)
         self._heap = [h for h in self._heap if h[2] not in gone]
         heapq.heapify(self._heap)
+        self._pending_ids = {h[2] for h in self._heap}
 
     # ------------------------------------------------------------ api
     def put(self, spec: TaskSpec):
@@ -82,6 +88,8 @@ class TaskQueue:
             self._tasks[spec.task_id] = spec
             heapq.heappush(self._heap,
                            (-spec.priority, next(self._seq), spec.task_id))
+            if spec.task_id not in self._leased:
+                self._pending_ids.add(spec.task_id)
 
     def put_many(self, specs):
         for s in specs:
@@ -91,15 +99,22 @@ class TaskQueue:
         with self._lock:
             self._expire_locked()
             while self._heap:
-                _, _, tid = heapq.heappop(self._heap)
+                _, seq, tid = heapq.heappop(self._heap)
                 # skip done/dead ids and duplicate heap entries for a task
                 # that is currently leased (expiry-requeue followed by a
                 # late nack leaves two entries; delivering both would hand
                 # one task to two consumers concurrently)
                 if tid in self._acked or tid in self._dead \
                         or tid in self._leased:
+                    # a skipped entry is consumed: if a re-publish of an
+                    # already-acked id put it back in the pending set, drop
+                    # it or depth() would over-report forever (leased ids
+                    # are never in the set; discard is a no-op there)
+                    self._pending_ids.discard(tid)
                     continue
                 self._leased[tid] = time.time() + lease_seconds
+                self._leased_seq[tid] = seq
+                self._pending_ids.discard(tid)
                 self._log("lease", id=tid)
                 return self._tasks[tid]
             return None
@@ -118,9 +133,36 @@ class TaskQueue:
             self._leased[task_id] = time.time() + seconds
             return True
 
+    def release(self, task_id: str) -> bool:
+        """Voluntarily return a leased task to the pending queue *without*
+        counting a retry — the consumer looked at it and cannot place it
+        yet (e.g. the serving gateway's admission control found no replica
+        with enough free KV blocks). Unlike nack this never dead-letters.
+        Returns False if the task is not currently leased."""
+        with self._lock:
+            if task_id not in self._leased:
+                return False
+            del self._leased[task_id]
+            spec = self._tasks[task_id]
+            # re-queue under the seq the lease held so the task keeps its
+            # FIFO position within its priority class — a capacity-deferred
+            # request must not drop behind later-submitted peers (that
+            # would starve large requests under sustained small-request
+            # load). Not journaled: like extend_lease, a dispatch loop can
+            # lease+release every step, and replay restores leases as
+            # pending anyway — logging would be O(steps) dead weight.
+            seq = self._leased_seq.pop(task_id, None)
+            if seq is None:
+                seq = next(self._seq)
+            heapq.heappush(self._heap, (-spec.priority, seq, task_id))
+            self._pending_ids.add(task_id)
+            return True
+
     def ack(self, task_id: str):
         with self._lock:
             self._leased.pop(task_id, None)
+            self._leased_seq.pop(task_id, None)
+            self._pending_ids.discard(task_id)
             self._acked.add(task_id)
             self._log("ack", id=task_id)
 
@@ -129,16 +171,19 @@ class TaskQueue:
         True when this nack dead-lettered the task (retries exhausted)."""
         with self._lock:
             self._leased.pop(task_id, None)
+            self._leased_seq.pop(task_id, None)
             n = self._retries.get(task_id, 0) + 1
             self._retries[task_id] = n
             spec = self._tasks[task_id]
             if n > spec.max_retries:
                 self._dead.append(task_id)
+                self._pending_ids.discard(task_id)
                 self._log("dead", id=task_id)
                 return True
             self._log("nack", id=task_id, retries=n)
             heapq.heappush(self._heap,
                            (-spec.priority, next(self._seq), task_id))
+            self._pending_ids.add(task_id)
             return False
 
     def _expire_locked(self):
@@ -146,19 +191,20 @@ class TaskQueue:
         expired = [tid for tid, dl in self._leased.items() if dl < now]
         for tid in expired:
             del self._leased[tid]
+            self._leased_seq.pop(tid, None)
             spec = self._tasks[tid]
             heapq.heappush(self._heap,
                            (-spec.priority, next(self._seq), tid))
+            self._pending_ids.add(tid)
             self._log("expire", id=tid)
 
     # ------------------------------------------------------------ stats
     def _deliverable_locked(self) -> int:
         """Tasks that get() would actually hand out: excludes done/dead/
         leased ids and counts duplicate heap entries (expiry-requeue plus a
-        late nack can leave two) once."""
-        return len({h[2] for h in self._heap
-                    if h[2] not in self._acked and h[2] not in self._dead
-                    and h[2] not in self._leased})
+        late nack can leave two) once. O(1): the id set is maintained
+        incrementally by put/get/ack/nack/release/expire."""
+        return len(self._pending_ids)
 
     def depth(self) -> int:
         with self._lock:

@@ -91,13 +91,17 @@ def to_markdown(rows: Sequence[Tuple], header: Sequence[str]) -> str:
 
 # ------------------------------------------------------- serving dashboards
 
+def _metric_table(metrics: Dict[str, float], header=("metric", "value")) -> str:
+    rows = [(k, f"{v:.3f}" if isinstance(v, float) else v)
+            for k, v in metrics.items()]
+    return to_markdown(rows, header)
+
+
 def gateway_summary_table(summary: Dict[str, float]) -> str:
     """Markdown table of one gateway run's throughput/latency summary
     (`repro.gateway.GatewayMetrics.summary()`), the serving analogue of the
     paper's Fig 6 queue dashboard."""
-    rows = [(k, f"{v:.3f}" if isinstance(v, float) else v)
-            for k, v in summary.items()]
-    return to_markdown(rows, ("metric", "value"))
+    return _metric_table(summary)
 
 
 def gauge_series(gauges: Sequence[Tuple[float, int, int]], column: int
@@ -110,11 +114,23 @@ def gauge_series(gauges: Sequence[Tuple[float, int, int]], column: int
     return [(g[0] - t0, float(g[column])) for g in gauges]
 
 
+def kvcache_summary_table(kv: Dict[str, float]) -> str:
+    """Markdown table of the paged KV cache's hit/miss/eviction counters
+    (`repro.kvcache.CacheMetrics.as_dict()`, aggregated across replicas by
+    `Gateway.kvcache_summary`). The reuse_frac row is the headline: the
+    fraction of prompt tokens served from cached KV instead of prefill."""
+    return _metric_table(kv, ("kv cache metric", "value"))
+
+
 def gateway_dashboard(summary: Dict[str, float],
-                      gauges: Sequence[Tuple[float, int, int]]) -> str:
+                      gauges: Sequence[Tuple[float, int, int]],
+                      kvcache: Optional[Dict[str, float]] = None) -> str:
     """Full text dashboard: summary table + queue-depth-over-time (Fig 6
-    shape) + slot-occupancy-over-time (Fig 7 shape, worker status)."""
+    shape) + slot-occupancy-over-time (Fig 7 shape, worker status) +
+    optional paged KV-cache counters."""
     parts = ["## gateway summary", gateway_summary_table(summary)]
+    if kvcache:
+        parts += ["\n## kv cache (paged)", kvcache_summary_table(kvcache)]
     depth = gauge_series(gauges, 1)
     if depth:
         parts += ["\n## queue depth (Fig 6)",

@@ -84,9 +84,14 @@ class LeastLoaded(DispatchPolicy):
 
 
 class PrefixAffinity(DispatchPolicy):
-    """Requests sharing a prompt prefix land on the same replica, so a
-    replica-local prefix cache (or just a warm KV working set) keeps hitting.
-    Falls back to least-loaded when the preferred replica is full/unhealthy.
+    """Requests sharing a prompt prefix land on the replica that actually
+    holds their prefilled KV. Replicas with a paged cache are ranked by
+    `ServeEngine.cached_prefix_tokens` — a radix-index probe returning how
+    many leading prompt tokens are resident — so routing reflects real
+    cached bytes, not a string heuristic. When nothing is cached anywhere
+    (cold start, or dense replicas that always report 0), falls back to the
+    original prefix-hash placement so future same-prefix traffic still
+    converges on one replica, then least-loaded.
     """
     name = "prefix-affinity"
 
@@ -97,8 +102,25 @@ class PrefixAffinity(DispatchPolicy):
         key = zlib.crc32(repr(list(prompt[:self.prefix_len])).encode())
         return key % max(n_replicas, 1)
 
+    @staticmethod
+    def _cached_tokens(replica, prompt) -> int:
+        """Radix probe, 0 for anything without one (dense engines report 0
+        themselves; policy unit tests use bare stub replicas)."""
+        eng = getattr(replica, "engine", None)
+        probe = getattr(eng, "cached_prefix_tokens", None)
+        return probe(prompt) if probe is not None else 0
+
     def choose(self, eligible, spec, replicas):
         prompt = spec.payload.get("prompt", [])
+        best, best_tokens = None, 0
+        for r in eligible:
+            cached = self._cached_tokens(r, prompt)
+            if cached > best_tokens or \
+                    (cached == best_tokens and best is not None
+                     and cached > 0 and r.load() < best.load()):
+                best, best_tokens = r, cached
+        if best is not None and best_tokens > 0:
+            return best
         want = self.preferred_id(prompt, len(replicas))
         for r in eligible:
             if r.replica_id == want:
@@ -163,9 +185,21 @@ class Gateway:
                  journal_path: Optional[str] = None,
                  session_id: str = "serve",
                  lease_seconds: float = 30.0,
-                 max_retries: int = 2):
+                 max_retries: int = 2,
+                 admit_budget: Optional[int] = None):
+        """admit_budget enables admission control *by token budget* rather
+        than slot count: a request's demand is prompt_len + max_new_tokens,
+        and (a) demand > admit_budget (or > every replica's per-request
+        token capacity) is terminally rejected with a 429-style event on
+        its TokenStream, (b) dispatch holds a request in the queue while
+        the fleet's committed tokens + demand would exceed the budget or no
+        replica has enough free KV blocks for it. With admit_budget=None,
+        paged replicas still gate dispatch on their free-block capacity
+        (they cannot ring-wrap like the dense layout), but nothing is
+        rejected up front."""
         if not engines:
             raise ValueError("Gateway needs at least one engine replica")
+        self.admit_budget = admit_budget
         self.queue = TaskQueue(journal_path)
         self.session_id = session_id
         # per-process nonce, fed into each task's payload so TaskSpec.make
@@ -199,10 +233,12 @@ class Gateway:
     @classmethod
     def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
               cache_len: int = 256, window=None, prefill_mode: str = "decode",
-              **kw) -> "Gateway":
+              kv_layout: str = "dense", block_size: int = 16,
+              pool_blocks: Optional[int] = None, **kw) -> "Gateway":
         engines = [ServeEngine(params, cfg, batch_slots=batch_slots,
                                cache_len=cache_len, window=window,
-                               prefill_mode=prefill_mode)
+                               prefill_mode=prefill_mode, kv_layout=kv_layout,
+                               block_size=block_size, pool_blocks=pool_blocks)
                    for _ in range(replicas)]
         return cls(engines, **kw)
 
@@ -233,12 +269,60 @@ class Gateway:
         gwreq.metrics = self.metrics.submit(gid, len(prompt))
         self._by_gid[gid] = gwreq
         self._by_task[spec.task_id] = gwreq
+        if self._over_capacity(self._demand(gwreq)):
+            # terminal 429 before the queue ever sees it: the request can
+            # never fit, journaling it would only leak an undeliverable task
+            gwreq.stream.finish(reason="over_capacity", code=429)
+            self.metrics.reject(gid)
+            return gwreq
         self.queue.put(spec)
         return gwreq
 
     # ------------------------------------------------------------ dispatch
     def _eligible(self) -> List[EngineReplica]:
         return [r for r in self.replicas if r.healthy and r.free_slots() > 0]
+
+    # ------------------------------------------- admission by token budget
+    @staticmethod
+    def _demand(gwreq: GatewayRequest) -> int:
+        """KV positions the request commits if admitted."""
+        return len(gwreq.prompt) + gwreq.max_new_tokens
+
+    def _over_capacity(self, need: int) -> bool:
+        """True when the request can NEVER be admitted by any *healthy*
+        replica: larger than the token budget, or than every healthy
+        replica's per-request capacity. The capacity bound always binds
+        for paged replicas (they cannot ring-wrap); a dense replica caps
+        requests only once admission control is switched on (historical
+        ring semantics otherwise). Leaving such a request queued would
+        livelock dispatch — it would be leased, found unplaceable, and
+        released at the queue head forever, starving everything behind
+        it."""
+        if self.admit_budget is not None and need > self.admit_budget:
+            return True
+        healthy = [r for r in self.replicas if r.healthy]
+        if not healthy:
+            return False        # total outage: _abort_queued handles it
+
+        def possible(r: EngineReplica) -> bool:
+            if r.engine.kv_layout != "paged" and self.admit_budget is None:
+                return True
+            return need <= r.engine.token_capacity()
+
+        return not any(possible(r) for r in healthy)
+
+    def _committed_tokens(self) -> int:
+        return sum(self._demand(g) for g, _ in self._inflight.values())
+
+    def _fits(self, replica: EngineReplica, need: int) -> bool:
+        """Can this replica take the request *right now*? Dense replicas
+        keep the historical contract (a free slot is enough); paged
+        replicas must actually have the blocks."""
+        eng = replica.engine
+        if eng.kv_layout != "paged":
+            return True
+        return need <= eng.token_capacity() \
+            and need <= eng.free_token_capacity()
 
     def _dispatch_ready(self):
         while True:
@@ -261,7 +345,21 @@ class Gateway:
                     time.perf_counter() > gwreq.deadline:
                 self._reject(gwreq, spec.task_id)
                 continue
-            replica = self.policy.choose(eligible, spec, self.replicas)
+            need = self._demand(gwreq)
+            if self._over_capacity(need):       # adopted/journal-replayed
+                self._reject(gwreq, spec.task_id,
+                             reason="over_capacity", code=429)
+                continue
+            fit = [r for r in eligible if self._fits(r, need)]
+            if self.admit_budget is not None and \
+                    self._committed_tokens() + need > self.admit_budget:
+                fit = []
+            if not fit:
+                # admissible, just not *now*: hand it back (no retry
+                # penalty) and stop pulling — capacity frees as slots retire
+                self.queue.release(spec.task_id)
+                return
+            replica = self.policy.choose(fit, spec, self.replicas)
             self._place(gwreq, spec.task_id, replica)
 
     def _place(self, gwreq: GatewayRequest, task_id: str,
@@ -297,11 +395,13 @@ class Gateway:
         self._by_task[spec.task_id] = gwreq
         return gwreq
 
-    def _reject(self, gwreq: GatewayRequest, task_id: str):
-        """Deadline passed while queued: drop before burning decode compute
-        (an ack removes it; the journal keeps the record)."""
+    def _reject(self, gwreq: GatewayRequest, task_id: str, *,
+                reason: str = "deadline", code: Optional[int] = None):
+        """Terminal rejection while queued — deadline passed, or admission
+        control ruled the request un-servable (429). Dropped before burning
+        decode compute (an ack removes it; the journal keeps the record)."""
         self.queue.ack(task_id)
-        gwreq.stream.finish()
+        gwreq.stream.finish(reason=reason, code=code)
         self.metrics.reject(gwreq.gid)
 
     # -------------------------------------------------------- engine hooks
@@ -399,7 +499,9 @@ class Gateway:
         if not any(r.healthy for r in self.replicas):
             self._abort_queued()
             return 0
-        return active + depth + len(self._inflight)
+        # _inflight already covers every placed request (decoding or
+        # engine-pending), so adding `active` again would double-count
+        return len(self._inflight) + depth
 
     def run(self) -> List[GatewayRequest]:
         """Drive until every submitted request reaches a terminal state."""
@@ -429,3 +531,16 @@ class Gateway:
 
     def summary(self) -> dict:
         return self.metrics.summary()
+
+    def kvcache_summary(self) -> Optional[dict]:
+        """Aggregated hit/miss/eviction counters over every paged replica
+        (None when the fleet is all-dense). Rendered by
+        `core.reporting.kvcache_summary_table` / `gateway_dashboard`."""
+        ms = [r.engine.cache_metrics for r in self.replicas
+              if r.engine.cache_metrics is not None]
+        if not ms:
+            return None
+        agg = ms[0]
+        for m in ms[1:]:
+            agg = agg.merge(m)
+        return agg.as_dict()

@@ -11,6 +11,7 @@ training-sweep figures.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -74,11 +75,16 @@ class RequestMetrics:
 class GatewayMetrics:
     """Collects RequestMetrics plus step-sampled gauges for one gateway."""
 
+    # one gauge tuple is sampled per gateway step; a long-lived frontend
+    # would otherwise grow the list one entry per decoded token forever,
+    # so retention is windowed (the dashboard plots recent history anyway)
+    MAX_GAUGES = 100_000
+
     def __init__(self, total_slots: int = 0):
         self.requests: Dict[int, RequestMetrics] = {}
         self.total_slots = total_slots
         # (t, queue_depth, active_slots) sampled once per gateway step
-        self.gauges: List[tuple] = []
+        self.gauges: deque = deque(maxlen=self.MAX_GAUGES)
         self.dispatched = 0
         self.completed = 0
         self.rejected = 0

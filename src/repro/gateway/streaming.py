@@ -26,6 +26,11 @@ class TokenStream:
         self._pump = pump
         self._cb = on_token
         self.callback_error: Optional[BaseException] = None
+        # terminal event metadata: why the stream ended. None for a normal
+        # completion; admission control sets ("over_capacity", 429) — the
+        # HTTP-shaped signal a frontend would surface as Too Many Requests
+        self.finish_reason: Optional[str] = None
+        self.status_code: Optional[int] = None
 
     # ------------------------------------------------------- producer side
     def push(self, tok: int):
@@ -41,7 +46,14 @@ class TokenStream:
                 self.callback_error = err
                 self._cb = None
 
-    def finish(self):
+    def finish(self, reason: Optional[str] = None,
+               code: Optional[int] = None):
+        """Mark the stream terminal. `reason`/`code` record *why* (e.g.
+        ("over_capacity", 429) from token-budget admission control); the
+        first terminal event wins."""
+        if not self._done:
+            self.finish_reason = reason
+            self.status_code = code
         self._done = True
 
     def reset(self):

@@ -1,0 +1,12 @@
+"""Paged KV-cache subsystem: block pool + radix prefix index + metrics.
+
+See `manager.KVCacheManager` for the engine-facing API and
+`serve/engine.py` (kv_layout="paged") for the end-to-end integration.
+"""
+from repro.kvcache.block_pool import BlockPool, PoolExhausted
+from repro.kvcache.manager import Admission, KVCacheManager
+from repro.kvcache.metrics import CacheMetrics
+from repro.kvcache.radix import RadixTree
+
+__all__ = ["Admission", "BlockPool", "CacheMetrics", "KVCacheManager",
+           "PoolExhausted", "RadixTree"]

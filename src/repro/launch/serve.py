@@ -25,6 +25,20 @@ def main():
                     choices=sorted(POLICIES))
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=("dense", "paged"),
+                    help="decode cache: 'dense' = private per-slot KV "
+                    "strips (any arch); 'paged' = block-pool pages with "
+                    "radix-tree prefix reuse (pure-attention archs)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="KV pool size in pages (default 2x slot coverage)")
+    ap.add_argument("--admit-budget", type=int, default=None,
+                    help="admission control by token budget: total "
+                    "prompt+max_new tokens the fleet may have committed at "
+                    "once; oversized requests get a 429-style terminal "
+                    "stream event instead of a slot")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -45,7 +59,10 @@ def main():
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     gw = Gateway.build(params, cfg, replicas=args.replicas,
                        batch_slots=args.slots, cache_len=args.cache_len,
-                       policy=args.policy, journal_path=args.journal)
+                       policy=args.policy, journal_path=args.journal,
+                       kv_layout=args.kv_layout, block_size=args.block_size,
+                       pool_blocks=args.pool_blocks,
+                       admit_budget=args.admit_budget)
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
                for i in range(args.requests)]
     reqs = []
@@ -72,8 +89,14 @@ def main():
           f"p99={s['ttft_p99_ms']:.1f}ms  "
           f"itl p50={s['itl_p50_ms']:.2f}ms  "
           f"util={s['mean_slot_utilization']:.2f}")
+    kv = gw.kvcache_summary()
+    if kv is not None:
+        print(f"[serve] kvcache hit_rate={kv['hit_rate']:.2f} "
+              f"reused={kv['tokens_reused']} "
+              f"computed={kv['tokens_computed']} "
+              f"evicted={kv['blocks_evicted']} cow={kv['cow_copies']}")
     if args.dashboard:
-        print(reporting.gateway_dashboard(s, gw.metrics.gauges))
+        print(reporting.gateway_dashboard(s, gw.metrics.gauges, kvcache=kv))
 
 
 if __name__ == "__main__":

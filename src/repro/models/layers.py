@@ -218,6 +218,102 @@ def attention_decode(params, cfg, x, pos, cache_k, cache_v, cache_pos, *,
     return out, cache_k, cache_v, cache_pos
 
 
+def attention_decode_paged(params, cfg, x, pos, kpool, vpool, table, *,
+                           window=None, rope=True):
+    """Single-token decode over a *paged* KV cache (block tables).
+
+    x: (B, 1, d); pos: (B,) absolute position of the new token.
+    kpool/vpool: (P, bs, nkv, hd) — pool row b holds the bs-token KV page of
+    block id b for this layer. table: (B, nb) int32 block ids per slot; page
+    j of slot s holds positions [j*bs, (j+1)*bs). Returns
+    (out, new_kpool, new_vpool).
+
+    Scatter: the new token's k/v land in pool row table[s, pos//bs] at
+    offset pos % bs. Slots must never share their frontier block (the
+    engine's allocator guarantees it via copy-on-write); inactive slots
+    carry an all-zero table and scatter harmlessly into the reserved null
+    block 0. Gather: each slot reads its pages back as a dense (nb*bs) view
+    whose index IS the absolute position, so the causal/window mask needs
+    no stored position array.
+    """
+    B, _, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    bs = kpool.shape[1]
+    nb = table.shape[1]
+    q = (x @ params["wq"]).reshape(B, 1, nh, hd)
+    k_new = (x @ params["wk"]).reshape(B, 1, nkv, hd)
+    v_new = (x @ params["wv"]).reshape(B, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k_new = rms_norm(k_new, params["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    blk = jnp.take_along_axis(table, (pos // bs)[:, None], axis=1)[:, 0]
+    off = pos % bs
+    kpool = kpool.at[blk, off].set(k_new[:, 0])
+    vpool = vpool.at[blk, off].set(v_new[:, 0])
+    k = jnp.take(kpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
+    v = jnp.take(vpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
+    kv_pos = jnp.arange(nb * bs)[None, :]
+    valid = kv_pos <= pos[:, None]
+    if window is not None:
+        valid &= kv_pos > (pos[:, None] - window)
+    scale = 1.0 / math.sqrt(hd)
+    rep = nh // nkv
+    qr = q.reshape(B, nkv, rep, hd)
+    logits = jnp.einsum("bkrh,bskh->bkrs", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, :], logits,
+                       jnp.finfo(jnp.float32).min)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrs,bskh->bkrh", w, v.astype(jnp.float32))
+    out = out.reshape(B, 1, nh * hd).astype(x.dtype) @ params["wo"]
+    return out, kpool, vpool
+
+
+def attention_prefill_paged(params, cfg, x, q_pos, n_tok, kpool, vpool,
+                            table, *, window=None, rope=True):
+    """Suffix prefill over a paged cache: run `n_tok` real tokens (of the
+    S=x.shape[1] bucketed batch, rest padding) whose absolute positions are
+    `q_pos`, attending to everything already resident in this slot's pages
+    (the reused prefix) plus themselves, and scatter their K/V into the
+    pool. Single-sequence (B=1) — the engine prefills one slot at a time.
+
+    x: (1, S, d); q_pos: (S,) absolute positions (start + arange(S));
+    table: (nb,) this slot's block ids. Padded positions (index >= n_tok)
+    scatter into null block 0 and their outputs are garbage the caller
+    ignores. Returns (out, new_kpool, new_vpool).
+    """
+    B, S, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    bs = kpool.shape[1]
+    nb = table.shape[0]
+    q = (x @ params["wq"]).reshape(B, S, nh, hd)
+    k = (x @ params["wk"]).reshape(B, S, nkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, q_pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, q_pos[None, :], cfg.rope_theta)
+    real = jnp.arange(S) < n_tok
+    blk = jnp.where(real, jnp.take(table, q_pos // bs, axis=0), 0)
+    off = jnp.where(real, q_pos % bs, 0)
+    kpool = kpool.at[blk, off].set(k[0])
+    vpool = vpool.at[blk, off].set(v[0])
+    kall = jnp.take(kpool, table, axis=0).reshape(1, nb * bs, nkv, hd)
+    vall = jnp.take(vpool, table, axis=0).reshape(1, nb * bs, nkv, hd)
+    kv_pos = jnp.arange(nb * bs)
+    mask = kv_pos[None, :] <= q_pos[:, None]             # causal, absolute
+    if window is not None:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    scale = 1.0 / math.sqrt(hd)
+    out = _sdpa_xla(q, kall, vall, mask[None], scale)
+    return out.reshape(B, S, nh * hd) @ params["wo"], kpool, vpool
+
+
 # ----------------------------------------------------------------------------- mlp
 
 def init_mlp(key, d_model, d_ff, dtype, gated=True):

@@ -383,6 +383,170 @@ def decode_step(params, cfg, tokens, pos, cache, window=None):
                                      "tail": tuple(new_tail)}
 
 
+# ============================================================== paged decode
+
+def paged_supported(cfg) -> bool:
+    """The paged KV path covers pure-attention decoder stacks: recurrent
+    mixers (ssm/rglru) carry O(1) state that a prefix block chain cannot
+    capture, and enc-dec adds cross caches the block table doesn't model."""
+    return (not cfg.is_encdec
+            and all(t == "attn" for t in cfg.layer_types()))
+
+
+def init_paged_cache(cfg, n_pool_blocks: int, block_size: int):
+    """Pool-shaped KV cache: per attention layer, row b of the (P, bs, nkv,
+    hd) pool arrays is the bs-token page named by block id b. The same
+    block id indexes every layer, so one host-side block table describes a
+    sequence across the whole stack. Structure mirrors `init_cache`
+    ("blocks" stacked on a leading n_blocks axis, "tail" unrolled) so the
+    decode scan consumes it unchanged. No "pos" leaf: a paged page's gather
+    index *is* its absolute position."""
+    if not paged_supported(cfg):
+        raise ValueError(f"{cfg.arch_id}: paged KV cache requires a pure-"
+                         "attention decoder (no ssm/rglru/enc-dec layers)")
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    adt = cfg.activation_dtype
+
+    def one():
+        return {"k": jnp.zeros((n_pool_blocks, block_size, nkv, hd), adt),
+                "v": jnp.zeros((n_pool_blocks, block_size, nkv, hd), adt)}
+
+    def stack(tree, n):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+    blocks = None
+    if cfg.n_blocks > 0:
+        blocks = stack(tuple(one() for _ in cfg.block_pattern), cfg.n_blocks)
+    tail = tuple(one() for _ in cfg.tail_pattern)
+    return {"blocks": blocks, "tail": tail}
+
+
+def copy_pool_blocks(cache, src_ids, dst_ids):
+    """Copy whole KV pages src -> dst in every layer's pool (the device
+    half of copy-on-write: the host manager picked the ids)."""
+    src = jnp.asarray(src_ids, jnp.int32)
+    dst = jnp.asarray(dst_ids, jnp.int32)
+
+    def cp(a, axis):
+        idx = (slice(None),) * axis
+        return a.at[idx + (dst,)].set(a[idx + (src,)])
+
+    out = {"blocks": None}
+    if cache.get("blocks") is not None:
+        out["blocks"] = jax.tree.map(lambda a: cp(a, 1), cache["blocks"])
+    out["tail"] = jax.tree.map(lambda a: cp(a, 0), cache["tail"])
+    return out
+
+
+def _layer_decode_paged(lp, cfg, x, pos, pool, table, window):
+    h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
+    att, ck, cv = L.attention_decode_paged(
+        lp["attn"], cfg, h, pos, pool["k"], pool["v"], table, window=window)
+    x = x + att
+    h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
+    ff, _ = _ffn_apply(lp, cfg, h)
+    return x + ff, {"k": ck, "v": cv}
+
+
+def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None):
+    """`decode_step` over a paged cache. tokens: (B, 1); pos: (B,); table:
+    (B, nb) block ids per slot (see `init_paged_cache`). Returns
+    (logits (B,1,V), new_cache). The gather/scatter per layer is
+    `layers.attention_decode_paged`."""
+    window = cfg.window if window is None else window
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    def block_fn(h, xs):
+        bp, bpool = xs
+        new_pools = []
+        for i in range(len(cfg.block_pattern)):
+            h, np_ = _layer_decode_paged(bp[i], cfg, h, pos, bpool[i],
+                                         table, window)
+            new_pools.append(np_)
+        return h, tuple(new_pools)
+
+    new_blocks = None
+    if cfg.n_blocks > 0 and "blocks" in params:
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        else:
+            ys = []
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["blocks"], cache["blocks"]))
+                x, y = block_fn(x, xs_i)
+                ys.append(y)
+            new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    new_tail = []
+    for i in range(len(cfg.tail_pattern)):
+        x, nc = _layer_decode_paged(params["tail"][i], cfg, x, pos,
+                                    cache["tail"][i], table, window)
+        new_tail.append(nc)
+    x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), {"blocks": new_blocks,
+                                     "tail": tuple(new_tail)}
+
+
+def _layer_prefill_paged(lp, cfg, x, q_pos, n_tok, pool, table, window):
+    h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
+    att, ck, cv = L.attention_prefill_paged(
+        lp["attn"], cfg, h, q_pos, n_tok, pool["k"], pool["v"], table,
+        window=window)
+    x = x + att
+    h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
+    ff, _ = _ffn_apply(lp, cfg, h)
+    return x + ff, {"k": ck, "v": cv}
+
+
+def forward_prefill_paged(params, cfg, tokens, start, n_tok, cache, table,
+                          window=None):
+    """Prefill only the *uncached suffix* of a prompt against a paged cache
+    whose pages [0, start) are already resident (radix prefix hit).
+
+    tokens: (1, S) suffix tokens, right-padded to the bucket length S;
+    start: scalar absolute position of tokens[0, 0]; n_tok: scalar number
+    of real (non-pad) tokens; table: (nb,) the slot's block chain. Returns
+    (logits (1, S, V), new_cache) — only logits[:, :n_tok] are meaningful.
+    """
+    window = cfg.window if window is None else window
+    S = tokens.shape[1]
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+    q_pos = start + jnp.arange(S)
+
+    def block_fn(h, xs):
+        bp, bpool = xs
+        new_pools = []
+        for i in range(len(cfg.block_pattern)):
+            h, np_ = _layer_prefill_paged(bp[i], cfg, h, q_pos, n_tok,
+                                          bpool[i], table, window)
+            new_pools.append(np_)
+        return h, tuple(new_pools)
+
+    new_blocks = None
+    if cfg.n_blocks > 0 and "blocks" in params:
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        else:
+            ys = []
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["blocks"], cache["blocks"]))
+                x, y = block_fn(x, xs_i)
+                ys.append(y)
+            new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    new_tail = []
+    for i in range(len(cfg.tail_pattern)):
+        x, nc = _layer_prefill_paged(params["tail"][i], cfg, x, q_pos, n_tok,
+                                     cache["tail"][i], table, window)
+        new_tail.append(nc)
+    x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), {"blocks": new_blocks,
+                                     "tail": tuple(new_tail)}
+
+
 def forward_prefill(params, cfg, batch, window=None):
     """Full forward that also returns per-layer caches at natural length
     (the serving engine copies them into a fixed-size ring/linear cache).

@@ -15,6 +15,12 @@ greedy, temperature, top-k/top-p with independent seeded PRNG streams. The
 engine also exposes event hooks (`on_token`, `on_finish`) that the gateway
 tier uses for streaming and telemetry; they default to None and cost
 nothing when unused.
+
+KV memory is pluggable (`kv_layout`): the default "dense" layout gives each
+slot a private cache strip; "paged" stores KV in refcounted block-pool
+pages with a radix-tree prefix index (`repro.kvcache`), so requests sharing
+a prompt prefix reuse already-prefilled pages (copy-on-write for partial
+pages) instead of re-running prefill — see __init__ for the trade-offs.
 """
 from __future__ import annotations
 
@@ -25,9 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kvcache import KVCacheManager, PoolExhausted
 from repro.models import transformer as T
 from repro.serve.sampler import GREEDY, Sampler, SamplingParams
-from repro.serve.step import build_decode
+from repro.serve.step import (build_decode, build_decode_paged,
+                              build_prefill_bucketed, build_prefill_paged,
+                              bucket_len)
 
 
 @dataclass
@@ -51,32 +60,88 @@ class Request:
 class ServeEngine:
     def __init__(self, params, cfg, *, batch_slots: int = 4,
                  cache_len: int = 256, window=None,
-                 prefill_mode: str = "decode"):
+                 prefill_mode: str = "decode", kv_layout: str = "dense",
+                 block_size: int = 16, pool_blocks: Optional[int] = None):
         """prefill_mode: "decode" feeds prompt tokens one at a time through
         decode_step (simple, exact); "bulk" runs the full-sequence prefill
-        kernel once per request and copies the natural-length caches into
-        the slot (one jit'd forward instead of len(prompt) decode steps —
-        the production path, one compile per prompt length)."""
+        kernel once per request and copies the caches into the slot (one
+        jit'd forward instead of len(prompt) decode steps — the production
+        path). Bulk prompts are right-padded to power-of-two buckets on
+        pure-attention archs, bounding jit retraces at log2(cache_len)
+        shapes instead of one per unique prompt length.
+
+        kv_layout selects the decode cache organization:
+          * "dense" — the historical layout: each slot owns a private
+            (cache_len, ...) KV strip per layer. Simple, supports every
+            arch (incl. ssm/rglru state and ring/window caches), zero
+            sharing: a request's prefill always computes its full prompt.
+          * "paged" — KV lives in a pool of `block_size`-token pages
+            (`kvcache.BlockPool` ids -> rows of per-layer pool arrays);
+            each slot holds a block table. A radix tree over past prompts
+            (`kvcache.RadixTree`) lets a new request *reuse* already-
+            prefilled pages for its longest cached prefix (copy-on-write
+            for a partially matching page) and prefill only the uncached
+            suffix. Pure-attention decoder archs only; window must be None
+            (paged pages are position-addressed, not a ring).
+        pool_blocks sizes the paged pool (default: 2x the slots' worth of
+        pages + the null block, so retired prefixes stay cached)."""
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
         self.cache_len = cache_len
-        self.cache = T.init_cache(cfg, batch_slots, cache_len)
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be dense|paged, got {kv_layout}")
+        self.kv_layout = kv_layout
+        self.block_size = block_size
+        self.manager: Optional[KVCacheManager] = None
+        if kv_layout == "paged":
+            if (window if window is not None else cfg.window) is not None:
+                raise ValueError("paged KV cache does not support sliding-"
+                                 "window (ring) caches; use kv_layout=dense")
+            if cache_len % block_size:
+                raise ValueError(f"cache_len {cache_len} must be a multiple "
+                                 f"of block_size {block_size}")
+            nb = cache_len // block_size
+            if pool_blocks is None:
+                pool_blocks = 2 * batch_slots * nb + 1
+            self.cache = T.init_paged_cache(cfg, pool_blocks, block_size)
+            self.manager = KVCacheManager(pool_blocks, block_size)
+            # per-slot block tables; row of ids into the pool arrays.
+            # Retired/empty slots are all-zero -> the reserved null block
+            self.table = np.zeros((batch_slots, nb), np.int32)
+            self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
+            self._decode_tok = jax.jit(build_decode_paged(cfg, window=window))
+            self._decode_lg = jax.jit(build_decode_paged(
+                cfg, window=window, return_logits=True))
+        else:
+            self.cache = T.init_cache(cfg, batch_slots, cache_len)
+            self._decode_tok = jax.jit(build_decode(cfg, window=window))
+            self._decode_lg = jax.jit(build_decode(cfg, window=window,
+                                                   return_logits=True))
         self.pos = np.full((batch_slots,), -1, np.int64)   # last written pos
         self.budget = np.zeros((batch_slots,), np.int64)
         self.active: List[Optional[Request]] = [None] * batch_slots
         # two decode variants: the in-jit argmax one keeps the all-greedy
         # hot path transferring one int per slot; the logits one (compiled
         # lazily, on first use) feeds host-side per-request sampling
-        self._decode_tok = jax.jit(build_decode(cfg, window=window))
-        self._decode_lg = jax.jit(build_decode(cfg, window=window,
-                                               return_logits=True))
         self.prefill_mode = prefill_mode
+        # prompt tokens actually run through the model (the paged path's
+        # prefix hits subtract from this; benchmarks assert the gap)
+        self.prefill_tokens_computed = 0
+        # pad bulk prompts only where padding cannot distort state:
+        # recurrent mixers (ssm/rglru) advance over pad tokens
+        self._bucket_prompts = T.paged_supported(cfg)
         if prefill_mode == "bulk":
-            from repro.serve.step import build_prefill
-            self._prefill_tok = jax.jit(build_prefill(cfg, window=window))
-            self._prefill_lg = jax.jit(build_prefill(cfg, window=window,
-                                                     return_logits=True))
+            if kv_layout == "paged":
+                self._prefill_tok = jax.jit(
+                    build_prefill_paged(cfg, window=window))
+                self._prefill_lg = jax.jit(build_prefill_paged(
+                    cfg, window=window, return_logits=True))
+            else:
+                self._prefill_tok = jax.jit(
+                    build_prefill_bucketed(cfg, window=window))
+                self._prefill_lg = jax.jit(build_prefill_bucketed(
+                    cfg, window=window, return_logits=True))
         self._pending: List[Request] = []
         self._finished: List[Request] = []
         # long-lived frontends (the gateway) keep their own handles; set
@@ -99,6 +164,11 @@ class ServeEngine:
     def enqueue(self, req: Request) -> Request:
         """Admit an externally-built Request (the gateway constructs its own
         so ids and samplers survive cross-replica retries)."""
+        if self.kv_layout == "paged" and \
+                len(req.prompt) + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request needs {len(req.prompt) + req.max_new_tokens} "
+                f"token positions, table holds {self.cache_len}")
         self._pending.append(req)
         return req
 
@@ -114,13 +184,71 @@ class ServeEngine:
     def has_work(self) -> bool:
         return bool(self._pending) or self.active_count() > 0
 
+    # --------------------------------------------------- capacity / cache
+    def token_capacity(self) -> int:
+        """Hard per-request ceiling (prompt + new tokens) for this engine:
+        the block table's span, and on the paged layout also the pool
+        itself (a pool smaller than one table can never serve a request
+        larger than its usable pages)."""
+        if self.kv_layout == "paged":
+            usable = (self.manager.pool.n_blocks - 1) * self.block_size
+            return min(self.cache_len, usable)
+        return self.cache_len
+
+    def free_token_capacity(self) -> int:
+        """Token positions this engine could commit to right now: free
+        slots x per-slot capacity on the dense layout; bounded further by
+        free + idle-cached pool blocks on the paged layout (the gateway's
+        admission-by-token-budget consults this)."""
+        free = self.free_slots()
+        if free <= 0:
+            return 0
+        cap = free * self.cache_len
+        if self.kv_layout == "paged":
+            cap = min(cap, self.manager.free_tokens())
+        return cap
+
+    def cached_prefix_tokens(self, prompt) -> int:
+        """How many leading tokens of `prompt` are already prefilled here
+        (radix probe; 0 on the dense layout). The gateway's prefix-affinity
+        policy ranks replicas by this instead of a hash heuristic."""
+        if self.manager is None:
+            return 0
+        return self.manager.match_len(prompt)
+
+    @property
+    def cache_metrics(self):
+        """kvcache.CacheMetrics for the paged layout, else None."""
+        return self.manager.metrics if self.manager is not None else None
+
     # ------------------------------------------------------------- internals
     def _admit(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self._pending:
+                adm = None
+                if self.kv_layout == "paged":
+                    req = self._pending[0]
+                    try:
+                        adm = self.manager.admit(
+                            req.prompt, len(req.prompt) + req.max_new_tokens)
+                    except PoolExhausted as err:
+                        if self.active_count() == 0:
+                            # nothing in flight will ever free blocks: the
+                            # request cannot be served — fail it, not the
+                            # replica (the gateway sees a request-scoped
+                            # error, same as a sampling failure)
+                            self._pending.pop(0)
+                            req.error = err
+                            req.done = True
+                            if self.retain_finished:
+                                self._finished.append(req)
+                            if self.on_finish:
+                                self.on_finish(req)
+                            continue
+                        break       # retry after a running request retires
                 req = self._pending.pop(0)
                 self.active[slot] = req
-                self._prefill_slot(slot, req)
+                self._prefill_slot(slot, req, adm)
 
     def _emit(self, req: Request, tok: int):
         req.output.append(tok)
@@ -138,17 +266,21 @@ class ServeEngine:
             req.error = err
             return err
 
-    def _prefill_slot(self, slot: int, req: Request):
+    def _prefill_slot(self, slot: int, req: Request, adm=None):
         """Fill this slot's cache from the prompt, merging only this slot's
-        rows so peers are untouched."""
+        rows so peers are untouched. `adm` is the paged-layout Admission
+        (block chain + reused-prefix length) from the manager."""
         greedy = req.sampling.is_greedy
-        if not req.prompt:
+        if self.kv_layout == "paged":
+            first = self._paged_prefill_slot(slot, req, adm)
+        elif not req.prompt:
             # degenerate empty prompt: nothing to condition on; argmax of a
             # zero logits row (token 0), matching the old engine
             first = 0 if greedy else self._sample_safe(
                 req, np.zeros((self.cfg.vocab_size,), np.float32))
         elif self.prefill_mode == "bulk":
             first = self._bulk_prefill_slot(slot, req)
+            self.prefill_tokens_computed += len(req.prompt)
         else:
             decode = self._decode_tok if greedy else self._decode_lg
             for t, tok in enumerate(req.prompt):
@@ -159,6 +291,7 @@ class ServeEngine:
                 self.cache = _merge_slot(self.cache, cache, slot)
             first = int(out[slot]) if greedy else \
                 self._sample_safe(req, np.asarray(out[slot]))
+            self.prefill_tokens_computed += len(req.prompt)
         self.pos[slot] = len(req.prompt) - 1
         if isinstance(first, Exception):        # request-scoped sampling bug
             self.budget[slot] = 0
@@ -171,15 +304,73 @@ class ServeEngine:
         if hit_eos or self.budget[slot] <= 0:
             self._retire(slot)
 
+    def _paged_prefill_slot(self, slot: int, req: Request, adm) -> int:
+        """Prefix-reusing prefill: wire the slot's block table from the
+        Admission (shared radix pages + CoW clone + fresh pages), then run
+        only the uncached suffix through the model — one bulk forward or
+        len(suffix) decode steps. Returns the first generated token."""
+        greedy = req.sampling.is_greedy
+        self._slot_blocks[slot] = list(adm.blocks)
+        self.table[slot, :] = 0
+        self.table[slot, :len(adm.blocks)] = adm.blocks
+        if adm.cow is not None:
+            # partially matching page: clone it so our writes can't clobber
+            # the cached original (copy-on-write)
+            src, dst = adm.cow
+            self.cache = T.copy_pool_blocks(self.cache, [src], [dst])
+            self.manager.cow_done(src)
+        start, P = adm.n_reused, len(req.prompt)
+        self.prefill_tokens_computed += P - start
+        if not req.prompt:
+            return 0 if greedy else self._sample_safe(
+                req, np.zeros((self.cfg.vocab_size,), np.float32))
+        if self.prefill_mode == "bulk":
+            suffix = req.prompt[start:]
+            Sb = bucket_len(len(suffix), self.cache_len)
+            toks = jnp.asarray([suffix + [0] * (Sb - len(suffix))], jnp.int32)
+            prefill = self._prefill_tok if greedy else self._prefill_lg
+            out, self.cache = prefill(
+                self.params, toks, jnp.asarray(start, jnp.int32),
+                jnp.asarray(len(suffix), jnp.int32), self.cache,
+                jnp.asarray(self.table[slot]))
+            first = int(out) if greedy else \
+                self._sample_safe(req, np.asarray(out))
+        else:
+            decode = self._decode_tok if greedy else self._decode_lg
+            # peers' rows masked to the null block: their lockstep garbage
+            # writes must not touch live pages (the paged analogue of
+            # _merge_slot on the dense path)
+            tbl = np.zeros_like(self.table)
+            tbl[slot] = self.table[slot]
+            tbl = jnp.asarray(tbl)
+            for t in range(start, P):
+                toks = jnp.zeros((self.slots, 1), jnp.int32) \
+                    .at[slot, 0].set(req.prompt[t])
+                pos = jnp.zeros((self.slots,), jnp.int32).at[slot].set(t)
+                out, self.cache = decode(self.params, toks, pos,
+                                         self.cache, tbl)
+            first = int(out[slot]) if greedy else \
+                self._sample_safe(req, np.asarray(out[slot]))
+        # index the prompt's full pages: the next request sharing this
+        # prefix reuses them instead of re-running prefill
+        self.manager.commit(req.prompt, self._slot_blocks[slot])
+        return first
+
     def _bulk_prefill_slot(self, slot: int, req: Request) -> int:
-        """One full-sequence prefill forward; natural-length caches are
-        copied into this slot of the fixed decode cache. Returns the
-        request's first generated token."""
+        """One full-sequence prefill forward; the caches are copied into
+        this slot of the fixed decode cache. Prompts are right-padded to
+        power-of-two buckets on pure-attention archs (see bucket_len) so
+        repeated traffic compiles O(log cache_len) shapes, not one per
+        natural prompt length. Returns the request's first generated
+        token."""
         from repro.serve.step import prefill_into_cache
         greedy = req.sampling.is_greedy
         prefill = self._prefill_tok if greedy else self._prefill_lg
-        toks = jnp.asarray([req.prompt], jnp.int32)             # (1, Sp)
-        out, nat = prefill(self.params, {"tokens": toks})
+        Sp = len(req.prompt)
+        Sb = bucket_len(Sp, self.cache_len) if self._bucket_prompts else Sp
+        toks = jnp.asarray([req.prompt + [0] * (Sb - Sp)], jnp.int32)
+        out, nat = prefill(self.params, {"tokens": toks},
+                           jnp.asarray(Sp, jnp.int32))
         slot_cache = T.init_cache(self.cfg, 1, self.cache_len)
         slot_cache = prefill_into_cache(self.cfg, nat, slot_cache,
                                         jnp.asarray([len(req.prompt)]))
@@ -201,9 +392,27 @@ class ServeEngine:
         return int(out[0]) if greedy else \
             self._sample_safe(req, np.asarray(out[0]))
 
+    def _release_slot_blocks(self, slot: int, req: Optional[Request],
+                             commit: bool = True):
+        """Paged bookkeeping when a slot empties: optionally index the
+        sequence written so far (prompt + generated full pages) for future
+        prefix reuse, then drop the request's block references — pages the
+        radix tree kept stay resident, the rest return to the pool."""
+        blocks = self._slot_blocks[slot]
+        if not blocks:
+            return
+        if commit and req is not None:
+            written = (req.prompt + req.output)[:int(self.pos[slot]) + 1]
+            self.manager.commit(written, blocks)
+        self.manager.release(blocks)
+        self._slot_blocks[slot] = []
+        self.table[slot, :] = 0
+
     def _retire(self, slot: int):
         req = self.active[slot]
         req.done = True
+        if self.kv_layout == "paged":
+            self._release_slot_blocks(slot, req)
         self.active[slot] = None
         self.pos[slot] = -1
         if self.retain_finished:
@@ -224,9 +433,16 @@ class ServeEngine:
         pos = np.maximum(self.pos + 1, 0).astype(np.int32)
         greedy_batch = all(self.active[s].sampling.is_greedy for s in live)
         decode = self._decode_tok if greedy_batch else self._decode_lg
-        out, new_cache = decode(self.params, jnp.asarray(toks),
-                                jnp.asarray(pos), self.cache)
-        self.cache = _merge_slots(self.cache, new_cache, live)
+        if self.kv_layout == "paged":
+            # no merge needed: every live slot scatters exactly into its
+            # own frontier page; empty slots' zero tables hit the null block
+            out, self.cache = decode(self.params, jnp.asarray(toks),
+                                     jnp.asarray(pos), self.cache,
+                                     jnp.asarray(self.table))
+        else:
+            out, new_cache = decode(self.params, jnp.asarray(toks),
+                                    jnp.asarray(pos), self.cache)
+            self.cache = _merge_slots(self.cache, new_cache, live)
         out = np.asarray(out)
         for s in live:
             req = self.active[s]
@@ -270,6 +486,10 @@ class ServeEngine:
             return True
         for slot in range(self.slots):
             if self.active[slot] is req:
+                if self.kv_layout == "paged":
+                    # replica is being failed out: don't index its pages
+                    # (state is suspect), just return the references
+                    self._release_slot_blocks(slot, req, commit=False)
                 self.active[slot] = None
                 self.pos[slot] = -1
                 return True

@@ -39,14 +39,81 @@ def build_decode(cfg, *, window=None, return_logits: bool = False):
     return decode
 
 
+# --------------------------------------------------------------- paged path
+
+def bucket_len(n: int, cap: int) -> int:
+    """Round a sequence length up to a power of two (capped): bulk prefill
+    retraces per input shape, so serving traffic with naturally varying
+    prompt lengths would pay XLA compile time per unique length. Bucketing
+    to powers of two bounds the trace count at log2(cap) shapes."""
+    b = 1
+    while b < n:
+        b *= 2
+    if cap and b > cap:
+        return max(cap, n)      # never round *down* below the real length
+    return b
+
+
+def build_decode_paged(cfg, *, window=None, return_logits: bool = False):
+    """Decode over block tables: gather each slot's KV pages from the pool,
+    scatter the new token's K/V back into its frontier page (see
+    `transformer.decode_step_paged`). Same (token|logits, cache) contract
+    as `build_decode`, with the extra `table` operand."""
+    def decode(params, tokens, pos, cache, table):
+        logits, cache = T.decode_step_paged(params, cfg, tokens, pos, cache,
+                                            table, window=window)
+        if return_logits:
+            return logits[:, -1, :], cache
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return decode
+
+
+def build_prefill_paged(cfg, *, window=None, return_logits: bool = False):
+    """Suffix-only prefill on a prefix-cache hit: `tokens` (1, S_bucket) are
+    the uncached prompt tail starting at absolute position `start`
+    (`n_tok` real, rest right-pad); the resident prefix pages are attended
+    through the slot's block `table`. Emits the last real position's
+    greedy token / logits plus the updated pool."""
+    def prefill(params, tokens, start, n_tok, cache, table):
+        logits, cache = T.forward_prefill_paged(
+            params, cfg, tokens, start, n_tok, cache, table, window=window)
+        last = jnp.take(logits[0], n_tok - 1, axis=0)
+        if return_logits:
+            return last, cache
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+    return prefill
+
+
+def build_prefill_bucketed(cfg, *, window=None, return_logits: bool = False):
+    """Dense bulk prefill for right-padded prompts: like `build_prefill`
+    but reads the last *real* position (`n_tok - 1`) instead of the last
+    column, so one jit trace serves every prompt padded to the same
+    power-of-two bucket."""
+    def prefill(params, batch, n_tok):
+        logits, caches = T.forward_prefill(params, cfg, batch, window=window)
+        last = jnp.take(logits, n_tok - 1, axis=1)       # (B, V)
+        if return_logits:
+            return last, caches
+        return jnp.argmax(last, axis=-1).astype(jnp.int32), caches
+    return prefill
+
+
 def prefill_into_cache(cfg, caches, cache, prompt_lens):
     """Copy natural-length prefill caches into the fixed-size decode cache.
 
-    caches: output of forward_prefill (k/v at prompt length S_p).
+    caches: output of forward_prefill (k/v at prompt length S_p, possibly
+    right-padded past the real prompts).
     cache: zero-initialized decode cache (length >= S_p, or ring for window).
+    prompt_lens: (B,) real prompt lengths — entries at positions >=
+    prompt_lens[b] are padding and get pos = -1 so decode masks them (the
+    slots they occupy are reclaimed naturally when decode writes those
+    positions).
     Attention entries are placed at slot = pos % cache_len so both linear and
     ring caches are handled by one rule. SSM/RG-LRU states copy directly.
     """
+    prompt_lens = jnp.asarray(prompt_lens)
+
     def copy_layer(dst, src):
         if "k" in dst:   # attention
             Sc = dst["k"].shape[1]
@@ -58,10 +125,11 @@ def prefill_into_cache(cfg, caches, cache, prompt_lens):
                                 (src["k"], src["v"], src["pos"]))
             slots = psrc % Sc                        # (B, take)
             bidx = jnp.arange(ksrc.shape[0])[:, None]
+            pvals = jnp.where(psrc < prompt_lens[:, None], psrc, -1)
             new = dict(dst)
             new["k"] = dst["k"].at[bidx, slots].set(ksrc)
             new["v"] = dst["v"].at[bidx, slots].set(vsrc)
-            new["pos"] = dst["pos"].at[bidx, slots].set(psrc)
+            new["pos"] = dst["pos"].at[bidx, slots].set(pvals)
             for ck in ("cross_k", "cross_v"):
                 if ck in src:
                     new[ck] = src[ck]

@@ -1,0 +1,280 @@
+"""kvcache subsystem: block pool refcount discipline, radix prefix index,
+manager admission/eviction — property tests (hypothesis, optional) plus
+deterministic scenario tests."""
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.kvcache import (BlockPool, KVCacheManager, PoolExhausted,
+                           RadixTree)
+
+BS = 4
+
+
+# ------------------------------------------------------------------ pool
+
+def test_pool_basics():
+    p = BlockPool(8, BS)
+    assert p.free_count() == 7                  # block 0 reserved
+    a = p.alloc(3)
+    assert len(set(a)) == 3 and 0 not in a
+    assert p.free_count() == 4
+    p.incref(a)
+    assert p.decref(a) == []                    # still referenced
+    assert p.decref(a) == a                     # now free
+    assert p.free_count() == 7
+
+
+def test_pool_double_free_raises():
+    p = BlockPool(4, BS)
+    (b,) = p.alloc(1)
+    p.decref([b])
+    with pytest.raises(ValueError):
+        p.decref([b])
+    with pytest.raises(ValueError):
+        p.incref([b])                           # incref on a free block
+
+
+def test_pool_exhaustion_is_all_or_nothing():
+    p = BlockPool(4, BS)
+    p.alloc(2)
+    with pytest.raises(PoolExhausted):
+        p.alloc(2)
+    assert p.free_count() == 1                  # nothing leaked
+
+
+def test_pool_null_block_protected():
+    p = BlockPool(4, BS)
+    for _ in range(3):
+        assert BlockPool.NULL_BLOCK not in p.alloc(1)
+    with pytest.raises(ValueError):
+        p.decref([BlockPool.NULL_BLOCK])
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(-4, 4), max_size=60))
+def test_pool_refcount_conservation(ops):
+    """Any alloc/incref/decref interleaving preserves the partition
+    invariant: every block is exactly either free or refcounted."""
+    p = BlockPool(9, BS)
+    live = []                                   # (block, refs) we hold
+    for op in ops:
+        if op > 0:                              # alloc up to op blocks
+            try:
+                for b in p.alloc(min(op, 3)):
+                    live.append(b)
+            except PoolExhausted:
+                pass
+        elif op < 0 and live:                   # drop one held ref
+            b = live.pop(abs(op) % len(live))
+            p.decref([b])
+        elif live:                              # duplicate a ref
+            b = live[len(live) // 2]
+            p.incref([b])
+            live.append(b)
+        p.check_invariants()
+        assert p.allocated_count() == len(set(live))
+
+
+# ----------------------------------------------------------------- radix
+
+def _tree(n_blocks=64):
+    pool = BlockPool(n_blocks, BS)
+    return RadixTree(BS, pool), pool
+
+
+def _insert_owned(tree, pool, toks, blocks):
+    """Insert and drop the caller's allocator refs, as a retiring request
+    does: afterwards the tree is the blocks' only owner."""
+    tree.insert(toks, blocks)
+    pool.decref(blocks)
+
+
+def test_radix_insert_match_roundtrip():
+    t, pool = _tree()
+    toks = list(range(12))                      # 3 full chunks
+    blocks = pool.alloc(3)
+    t.insert(toks, blocks)
+    got, partial = t.match(toks)
+    assert got == blocks and partial is None
+    # longer query still matches the stored prefix
+    got, _ = t.match(toks + [99, 98])
+    assert got == blocks
+    # diverging mid-block yields a CoW partial
+    got, partial = t.match(toks[:9] + [77, 77, 77])
+    assert got == blocks[:2] and partial == (blocks[2], 1)
+
+
+def test_radix_split_preserves_chains():
+    t, pool = _tree()
+    a = pool.alloc(3)
+    t.insert(list(range(12)), a)
+    b = pool.alloc(3)
+    # shares the first two chunks, diverges on the third
+    seq_b = list(range(8)) + [50, 51, 52, 53]
+    t.insert(seq_b, a[:2] + b[2:])              # caller reuses matched ids
+    got_a, _ = t.match(list(range(12)))
+    got_b, _ = t.match(seq_b)
+    assert got_a == a
+    assert got_b == a[:2] + [b[2]]
+    # duplicate prefix ids were deduplicated: still 2 refs (ours + tree's
+    # from the FIRST insert), not a third from the second insert
+    assert pool.ref(a[0]) == 2
+
+
+def test_radix_lru_evicts_coldest_first():
+    t, pool = _tree(16)
+    a = pool.alloc(2)
+    _insert_owned(t, pool, list(range(8)), a)
+    b = pool.alloc(2)
+    _insert_owned(t, pool, list(range(100, 108)), b)
+    t.match(list(range(8)))                     # touch A -> B is coldest
+    freed = t.evict(2)
+    assert freed == 2
+    assert t.match(list(range(100, 108)))[0] == []      # B gone
+    assert t.match(list(range(8)))[0] == a              # A survives
+
+
+def test_radix_evict_skips_in_use_blocks():
+    t, pool = _tree(16)
+    a = pool.alloc(2)
+    _insert_owned(t, pool, list(range(8)), a)
+    pool.incref([a[0]])                         # a running request shares it
+    assert t.evict(10) == 1                     # only the tail block freed
+    assert pool.ref(a[0]) == 2                  # still cached + in use
+    pool.decref([a[0]])
+    assert t.evict(10) == 1                     # now reclaimable
+
+
+if HAVE_HYPOTHESIS:
+    _seqs = st.lists(
+        st.lists(st.integers(0, 5), min_size=1, max_size=20),
+        min_size=1, max_size=12)
+
+
+@settings(max_examples=100, deadline=None)
+@given(_seqs if HAVE_HYPOTHESIS else st)
+def test_radix_match_is_consistent_prefix(seqs):
+    """After any insert sequence: match(q) returns block chains whose token
+    coverage is a block-aligned prefix of q, refcounts stay conserved, and
+    re-matching an inserted sequence recovers full-chunk coverage."""
+    t, pool = _tree(256)
+    stored = {}
+    for toks in seqs:
+        n = len(toks) // BS
+        if not n:
+            continue
+        got, _ = t.match(toks)
+        try:
+            fresh = pool.alloc(n - len(got))
+        except PoolExhausted:
+            break
+        t.insert(toks, got + fresh)
+        # the tree took its own ref on every newly stored block; drop ours
+        # so the tree is sole owner (matched `got` blocks were never ours)
+        pool.decref(fresh)
+        stored[tuple(toks[:n * BS])] = True
+    for toks in stored:
+        got, _ = t.match(list(toks))
+        assert len(got) == len(toks) // BS
+    for b in t.all_blocks():
+        assert pool.ref(b) >= 1
+    pool.check_invariants()
+
+
+# --------------------------------------------------------------- manager
+
+def test_manager_admission_reuses_prefix_and_cow():
+    m = KVCacheManager(32, BS)
+    p1 = list(range(12))
+    a1 = m.admit(p1, 16)
+    assert a1.n_reused == 0
+    m.commit(p1, a1.blocks)
+    m.release(a1.blocks)
+    # full-block + partial-block (CoW) reuse
+    p2 = list(range(10)) + [99]
+    a2 = m.admit(p2, 16)
+    assert a2.n_reused == 10
+    assert a2.cow is not None and a2.cow[1] == a2.fresh[0]
+    m.cow_done(a2.cow[0])
+    m.release(a2.blocks)
+    m.check_invariants()
+    assert m.metrics.hits == 1 and m.metrics.cow_copies == 1
+
+
+def test_manager_caps_reuse_below_full_prompt():
+    """Even a fully-cached prompt must compute >= 1 token for logits."""
+    m = KVCacheManager(32, BS)
+    p = list(range(8))
+    a = m.admit(p, 12)
+    m.commit(p, a.blocks)
+    m.release(a.blocks)
+    again = m.admit(p, 12)
+    assert again.n_reused == 7                  # 1 full block + 3 CoW tokens
+    assert m.metrics.tokens_computed == 8 + 1
+
+
+def test_manager_eviction_under_pressure_and_exhaustion():
+    m = KVCacheManager(9, BS)                   # 8 usable blocks
+    outs = []
+    for i in range(6):
+        p = [100 * i + j for j in range(8)]
+        a = m.admit(p, 8)                       # 2 blocks each
+        m.commit(p, a.blocks)
+        m.release(a.blocks)
+        outs.append(p)
+        m.check_invariants()
+    assert m.metrics.blocks_evicted > 0         # LRU chains were reclaimed
+    with pytest.raises(PoolExhausted):
+        m.admit(list(range(1000, 1064)), 64)    # can never fit
+    m.check_invariants()
+
+
+def test_manager_cow_source_survives_eviction_pressure():
+    """The CoW source block must be pinned before eviction runs: with only
+    a tree ref it is a legal LRU victim, and the LIFO free list would hand
+    it back as one of the same request's fresh blocks — n_reused would
+    then claim tokens from a page holding garbage."""
+    m = KVCacheManager(5, BS)                   # 4 usable blocks
+    a = m.admit([1, 2, 3, 4, 5], 8)
+    m.commit([1, 2, 3, 4, 5], a.blocks)
+    m.release(a.blocks)
+    # partial match on the cached block; 3 blocks needed, only 2 free
+    b = m.admit([1, 2, 3, 9, 9, 9, 9, 9, 9], 12)
+    assert b.cow is not None
+    src, dst = b.cow
+    assert src != dst and src not in b.fresh
+    assert b.n_reused == 3
+    m.cow_done(src)
+    m.release(b.blocks)
+    m.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 14)),
+                min_size=1, max_size=30))
+def test_manager_admit_release_conserves_blocks(reqs):
+    """Random admit/commit/release traffic: no leaks, no double frees,
+    tree never references a freed block."""
+    m = KVCacheManager(17, BS)
+    held = []
+    for fam, ln in reqs:
+        prompt = [fam * 1000 + i for i in range(ln)]
+        try:
+            adm = m.admit(prompt, ln + 4)
+        except PoolExhausted:
+            if held:                            # retire one and move on
+                m.release(held.pop(0))
+            continue
+        if adm.cow:
+            m.cow_done(adm.cow[0])
+        m.commit(prompt, adm.blocks)
+        held.append(adm.blocks)
+        if len(held) > 2:
+            m.release(held.pop(0))
+        m.check_invariants()
+    for blocks in held:
+        m.release(blocks)
+    m.check_invariants()
+    # all remaining references belong to the radix tree
+    assert m.pool.allocated_count() == len(set(m.radix.all_blocks()))

@@ -1,0 +1,180 @@
+"""Paged KV-cache engine: dense/paged decode equivalence, prefix-reuse
+accounting (shared blocks prefilled exactly once), copy-on-write safety,
+eviction under pool pressure, and bulk-prefill prompt-length bucketing."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+from repro.serve.sampler import SamplingParams
+from repro.serve.step import bucket_len
+
+V = 41
+BS = 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, V)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _engine(model, kv="paged", mode="decode", **kw):
+    params, cfg = model
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("cache_len", 32)
+    if kv == "paged":
+        kw.setdefault("block_size", BS)
+    return ServeEngine(params, cfg, prefill_mode=mode, kv_layout=kv, **kw)
+
+
+def _outputs(eng, prompts, max_new=5, sampling=None):
+    reqs = [eng.submit(p, max_new_tokens=max_new, sampling=sampling)
+            for p in prompts]
+    eng.run()
+    return [r.output for r in reqs]
+
+
+PROMPTS = [[3, 1, 4, 1, 5], [7, 8], [9, 10, 11, 12], [3, 1, 4, 2, 9]]
+
+
+@pytest.mark.parametrize("mode", ["decode", "bulk"])
+def test_paged_matches_dense_greedy(model, mode):
+    """Greedy batch decodes token-for-token identically on both layouts."""
+    dense = _outputs(_engine(model, kv="dense", mode=mode), PROMPTS)
+    paged = _outputs(_engine(model, kv="paged", mode=mode), PROMPTS)
+    assert paged == dense
+
+
+@pytest.mark.parametrize("scan,tail", [(False, ()), (True, ("attn",)),
+                                       (False, ("attn",))])
+def test_paged_matches_dense_across_stacking(scan, tail):
+    """The paged decode/prefill mirror decode_step's scan/unroll/tail
+    plumbing — equivalence must hold for every layer-stacking shape."""
+    cfg = ModelConfig("t", "dense", 3 if tail else 2, 32, 2, 2, 64, V,
+                      tail_pattern=tail, scan_layers=scan)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    outs = {}
+    for kv in ("dense", "paged"):
+        eng = ServeEngine(params, cfg, batch_slots=2, cache_len=32,
+                          kv_layout=kv, block_size=BS, prefill_mode="bulk")
+        reqs = [eng.submit(p, max_new_tokens=4) for p in PROMPTS[:2]]
+        eng.run()
+        outs[kv] = [r.output for r in reqs]
+    assert outs["paged"] == outs["dense"]
+
+
+def test_paged_matches_dense_sampled(model):
+    """Seeded sampling is layout-independent too (same logits in, same
+    PRNG stream out)."""
+    sp = SamplingParams(temperature=0.8, top_k=5, seed=11)
+    dense = _outputs(_engine(model, kv="dense"), PROMPTS[:2], sampling=sp)
+    paged = _outputs(_engine(model, kv="paged"), PROMPTS[:2], sampling=sp)
+    assert paged == dense
+
+
+def test_shared_prefix_prefilled_exactly_once(model):
+    """The integration contract: a batch sharing a block-aligned prompt
+    prefix computes the shared blocks' prefill once; every later request
+    reuses them and computes only its unique suffix (+1 boundary token when
+    the suffix starts mid-block)."""
+    prefix = [(i * 3 + 2) % V for i in range(8)]         # 2 full blocks
+    suffixes = [[20 + i, 30 + i] for i in range(4)]
+    prompts = [prefix + s for s in suffixes]
+    eng = _engine(model, batch_slots=1)                  # serialize admits
+    outs = _outputs(eng, prompts, max_new=3)
+    m = eng.cache_metrics
+    # request 0 computes prefix+suffix; requests 1..3 only their suffix
+    assert eng.prefill_tokens_computed == (8 + 2) + 3 * 2
+    assert m.hits == 3 and m.misses == 1
+    assert m.tokens_reused == 3 * 8
+    # and the reuse changed no output
+    dense = _outputs(_engine(model, kv="dense", batch_slots=1), prompts,
+                     max_new=3)
+    assert outs == dense
+
+
+def test_cow_does_not_corrupt_cached_chain(model):
+    """A partial-block hit clones the page (copy-on-write); decoding into
+    the clone must leave the original chain intact for later exact hits."""
+    base = [(i * 5 + 1) % V for i in range(10)]
+    fork = base[:9] + [17]                               # diverges in-block
+    eng = _engine(model, batch_slots=1)
+    out_base1 = _outputs(eng, [base], max_new=4)[0]
+    out_fork = _outputs(eng, [fork], max_new=4)[0]
+    assert eng.cache_metrics.cow_copies >= 1
+    out_base2 = _outputs(eng, [base], max_new=4)[0]      # original chain
+    assert out_base2 == out_base1
+    dense = _engine(model, kv="dense", batch_slots=1)
+    assert _outputs(dense, [base, fork, base], max_new=4) == \
+        [out_base1, out_fork, out_base2]
+
+
+def test_eviction_under_pool_pressure_keeps_outputs(model):
+    """A pool sized for barely one slot's worth of pages forces LRU
+    eviction of retired chains; outputs still match dense."""
+    prompts = [[(i * 7 + j) % V for j in range(10 + i % 3)]
+               for i in range(6)]
+    eng = _engine(model, batch_slots=2, cache_len=24,
+                  pool_blocks=2 * (24 // BS) + 2)
+    paged = _outputs(eng, prompts, max_new=4)
+    assert eng.cache_metrics.blocks_evicted > 0
+    eng.manager.check_invariants()
+    dense = _outputs(_engine(model, kv="dense", batch_slots=2, cache_len=24),
+                     prompts, max_new=4)
+    assert paged == dense
+
+
+def test_oversized_request_fails_request_scoped(model):
+    """A request that cannot ever fit the pool errors out alone; the
+    replica keeps serving."""
+    eng = _engine(model, batch_slots=1, cache_len=32, pool_blocks=4)
+    big = eng.submit(list(range(20)), max_new_tokens=4)
+    ok = eng.submit([1, 2, 3], max_new_tokens=3)
+    eng.run()
+    assert big.error is not None and big.done
+    assert ok.done and len(ok.output) == 3 and ok.error is None
+
+
+def test_over_capacity_submit_rejected(model):
+    eng = _engine(model, cache_len=16)
+    with pytest.raises(ValueError):
+        eng.submit(list(range(14)), max_new_tokens=8)    # 22 > 16
+
+
+def test_paged_requires_pure_attention():
+    cfg = ModelConfig("h", "hybrid", 2, 32, 2, 2, 64, V,
+                      block_pattern=("ssm",),
+                      ssm=SSMConfig(d_state=8, head_dim=16))
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, kv_layout="paged", cache_len=32,
+                    block_size=BS)
+
+
+# ------------------------------------------------------------- bucketing
+
+def test_bucket_len():
+    assert [bucket_len(n, 64) for n in (1, 2, 3, 5, 8, 9, 33)] == \
+        [1, 2, 4, 8, 8, 16, 64]
+    assert bucket_len(80, 64) == 80              # never rounds down
+    assert bucket_len(5, 0) == 8                 # uncapped
+
+
+def test_bulk_prefill_buckets_bound_retraces(model):
+    """Bulk prefill pads prompts to power-of-two buckets: serving many
+    natural lengths compiles one trace per bucket, not per length — and
+    the padding changes no output."""
+    prompts = [[(i + j) % V for j in range(n)]
+               for i, n in enumerate((3, 5, 6, 7))]
+    eng = _engine(model, kv="dense", mode="bulk", batch_slots=2)
+    outs = _outputs(eng, prompts, max_new=4)
+    ref = _outputs(_engine(model, kv="dense", mode="decode", batch_slots=2),
+                   prompts, max_new=4)
+    assert outs == ref
+    if hasattr(eng._prefill_tok, "_cache_size"):
+        # lengths 3,5,6,7 -> buckets {4, 8}: two traces, not four
+        assert eng._prefill_tok._cache_size() <= 2
