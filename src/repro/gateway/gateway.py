@@ -234,11 +234,15 @@ class Gateway:
     def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
               cache_len: int = 256, window=None, prefill_mode: str = "decode",
               kv_layout: str = "dense", block_size: int = 16,
-              pool_blocks: Optional[int] = None, **kw) -> "Gateway":
+              pool_blocks: Optional[int] = None,
+              decode_kernel: str = "reference", fused_tokens: int = 1,
+              **kw) -> "Gateway":
         engines = [ServeEngine(params, cfg, batch_slots=batch_slots,
                                cache_len=cache_len, window=window,
                                prefill_mode=prefill_mode, kv_layout=kv_layout,
-                               block_size=block_size, pool_blocks=pool_blocks)
+                               block_size=block_size, pool_blocks=pool_blocks,
+                               decode_kernel=decode_kernel,
+                               fused_tokens=fused_tokens)
                    for _ in range(replicas)]
         return cls(engines, **kw)
 

@@ -34,6 +34,15 @@ def main():
                     help="tokens per KV page (paged layout)")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="KV pool size in pages (default 2x slot coverage)")
+    ap.add_argument("--decode-kernel", default="reference",
+                    choices=("reference", "pallas"),
+                    help="paged decode attention read: 'reference' = dense "
+                    "block-table gather; 'pallas' = fused page-streaming "
+                    "kernel (interpret mode off-TPU)")
+    ap.add_argument("--fused-tokens", type=int, default=1,
+                    help="> 1 scans this many greedy decode steps per jit "
+                    "dispatch on the paged layout (one host round-trip "
+                    "per burst instead of per token)")
     ap.add_argument("--admit-budget", type=int, default=None,
                     help="admission control by token budget: total "
                     "prompt+max_new tokens the fleet may have committed at "
@@ -62,6 +71,8 @@ def main():
                        policy=args.policy, journal_path=args.journal,
                        kv_layout=args.kv_layout, block_size=args.block_size,
                        pool_blocks=args.pool_blocks,
+                       decode_kernel=args.decode_kernel,
+                       fused_tokens=args.fused_tokens,
                        admit_budget=args.admit_budget)
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
                for i in range(args.requests)]

@@ -219,7 +219,7 @@ def attention_decode(params, cfg, x, pos, cache_k, cache_v, cache_pos, *,
 
 
 def attention_decode_paged(params, cfg, x, pos, kpool, vpool, table, *,
-                           window=None, rope=True):
+                           window=None, rope=True, kernel="reference"):
     """Single-token decode over a *paged* KV cache (block tables).
 
     x: (B, 1, d); pos: (B,) absolute position of the new token.
@@ -232,14 +232,17 @@ def attention_decode_paged(params, cfg, x, pos, kpool, vpool, table, *,
     offset pos % bs. Slots must never share their frontier block (the
     engine's allocator guarantees it via copy-on-write); inactive slots
     carry an all-zero table and scatter harmlessly into the reserved null
-    block 0. Gather: each slot reads its pages back as a dense (nb*bs) view
-    whose index IS the absolute position, so the causal/window mask needs
-    no stored position array.
+    block 0.
+
+    The attention read is kernel-switched: ``kernel="reference"`` gathers
+    each slot's pages into a dense (nb*bs) view whose index IS the absolute
+    position (the CPU oracle path); ``kernel="pallas"`` streams pages
+    straight from the pool with online softmax, never materializing the
+    dense view (kernels/paged_attention; window must be None).
     """
     B, _, d = x.shape
     hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     bs = kpool.shape[1]
-    nb = table.shape[1]
     q = (x @ params["wq"]).reshape(B, 1, nh, hd)
     k_new = (x @ params["wk"]).reshape(B, 1, nkv, hd)
     v_new = (x @ params["wv"]).reshape(B, 1, nkv, hd)
@@ -253,21 +256,9 @@ def attention_decode_paged(params, cfg, x, pos, kpool, vpool, table, *,
     off = pos % bs
     kpool = kpool.at[blk, off].set(k_new[:, 0])
     vpool = vpool.at[blk, off].set(v_new[:, 0])
-    k = jnp.take(kpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
-    v = jnp.take(vpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
-    kv_pos = jnp.arange(nb * bs)[None, :]
-    valid = kv_pos <= pos[:, None]
-    if window is not None:
-        valid &= kv_pos > (pos[:, None] - window)
-    scale = 1.0 / math.sqrt(hd)
-    rep = nh // nkv
-    qr = q.reshape(B, nkv, rep, hd)
-    logits = jnp.einsum("bkrh,bskh->bkrs", qr.astype(jnp.float32),
-                        k.astype(jnp.float32)) * scale
-    logits = jnp.where(valid[:, None, None, :], logits,
-                       jnp.finfo(jnp.float32).min)
-    w = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bkrs,bskh->bkrh", w, v.astype(jnp.float32))
+    from repro.kernels.paged_attention import ops as pa_ops
+    out = pa_ops.paged_attention(q[:, 0], kpool, vpool, table, pos,
+                                 window=window, kernel=kernel)
     out = out.reshape(B, 1, nh * hd).astype(x.dtype) @ params["wo"]
     return out, kpool, vpool
 

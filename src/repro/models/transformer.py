@@ -439,21 +439,25 @@ def copy_pool_blocks(cache, src_ids, dst_ids):
     return out
 
 
-def _layer_decode_paged(lp, cfg, x, pos, pool, table, window):
+def _layer_decode_paged(lp, cfg, x, pos, pool, table, window,
+                        kernel="reference"):
     h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
     att, ck, cv = L.attention_decode_paged(
-        lp["attn"], cfg, h, pos, pool["k"], pool["v"], table, window=window)
+        lp["attn"], cfg, h, pos, pool["k"], pool["v"], table, window=window,
+        kernel=kernel)
     x = x + att
     h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
     ff, _ = _ffn_apply(lp, cfg, h)
     return x + ff, {"k": ck, "v": cv}
 
 
-def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None):
+def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None,
+                      kernel="reference"):
     """`decode_step` over a paged cache. tokens: (B, 1); pos: (B,); table:
     (B, nb) block ids per slot (see `init_paged_cache`). Returns
-    (logits (B,1,V), new_cache). The gather/scatter per layer is
-    `layers.attention_decode_paged`."""
+    (logits (B,1,V), new_cache). The scatter plus kernel-switched attention
+    read per layer is `layers.attention_decode_paged` (kernel="pallas"
+    streams pages from the pool; "reference" is the dense gather)."""
     window = cfg.window if window is None else window
     x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
 
@@ -462,7 +466,7 @@ def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None):
         new_pools = []
         for i in range(len(cfg.block_pattern)):
             h, np_ = _layer_decode_paged(bp[i], cfg, h, pos, bpool[i],
-                                         table, window)
+                                         table, window, kernel)
             new_pools.append(np_)
         return h, tuple(new_pools)
 
@@ -482,7 +486,7 @@ def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None):
     new_tail = []
     for i in range(len(cfg.tail_pattern)):
         x, nc = _layer_decode_paged(params["tail"][i], cfg, x, pos,
-                                    cache["tail"][i], table, window)
+                                    cache["tail"][i], table, window, kernel)
         new_tail.append(nc)
     x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _logits(params, cfg, x), {"blocks": new_blocks,

@@ -21,6 +21,23 @@ slot a private cache strip; "paged" stores KV in refcounted block-pool
 pages with a radix-tree prefix index (`repro.kvcache`), so requests sharing
 a prompt prefix reuse already-prefilled pages (copy-on-write for partial
 pages) instead of re-running prefill — see __init__ for the trade-offs.
+
+Two paged-layout decode accelerators stack on top:
+
+  * `decode_kernel="pallas"` swaps the per-token attention read from the
+    dense block-table gather ("reference", the oracle of record) to the
+    fused Pallas kernel (`kernels/paged_attention`) that streams KV pages
+    straight from the pool with online softmax. Off-TPU the kernel body
+    runs in Pallas interpret mode (Python on CPU) — same grid/BlockSpecs
+    as the TPU lowering, so CPU CI executes the real kernel, just slowly;
+    "reference" stays the sensible CPU production default.
+  * `fused_tokens=N` (N > 1) hoists the per-token host loop: while every
+    active slot is greedy, `step()` dispatches one jitted `lax.scan` of up
+    to N decode steps (`serve.step.build_decode_fused`) instead of N
+    jit-call round-trips, with EOS and per-slot budgets masked in-jit and
+    reconciled host-side on exit. Any slot needing host-side sampling
+    drops that dispatch back to single-token decode, and `on_token` hooks
+    then fire in a burst of up to N tokens per dispatch.
 """
 from __future__ import annotations
 
@@ -34,9 +51,9 @@ import numpy as np
 from repro.kvcache import KVCacheManager, PoolExhausted
 from repro.models import transformer as T
 from repro.serve.sampler import GREEDY, Sampler, SamplingParams
-from repro.serve.step import (build_decode, build_decode_paged,
-                              build_prefill_bucketed, build_prefill_paged,
-                              bucket_len)
+from repro.serve.step import (build_decode, build_decode_fused,
+                              build_decode_paged, build_prefill_bucketed,
+                              build_prefill_paged, bucket_len)
 
 
 @dataclass
@@ -61,7 +78,8 @@ class ServeEngine:
     def __init__(self, params, cfg, *, batch_slots: int = 4,
                  cache_len: int = 256, window=None,
                  prefill_mode: str = "decode", kv_layout: str = "dense",
-                 block_size: int = 16, pool_blocks: Optional[int] = None):
+                 block_size: int = 16, pool_blocks: Optional[int] = None,
+                 decode_kernel: str = "reference", fused_tokens: int = 1):
         """prefill_mode: "decode" feeds prompt tokens one at a time through
         decode_step (simple, exact); "bulk" runs the full-sequence prefill
         kernel once per request and copies the caches into the slot (one
@@ -84,14 +102,31 @@ class ServeEngine:
             suffix. Pure-attention decoder archs only; window must be None
             (paged pages are position-addressed, not a ring).
         pool_blocks sizes the paged pool (default: 2x the slots' worth of
-        pages + the null block, so retired prefixes stay cached)."""
+        pages + the null block, so retired prefixes stay cached).
+
+        decode_kernel ("reference"|"pallas") and fused_tokens (> 1 enables
+        the multi-token scan dispatch) accelerate the paged decode path —
+        see the module docstring. Both require kv_layout="paged"."""
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
         self.cache_len = cache_len
         if kv_layout not in ("dense", "paged"):
             raise ValueError(f"kv_layout must be dense|paged, got {kv_layout}")
+        if decode_kernel not in ("reference", "pallas"):
+            raise ValueError(f"decode_kernel must be reference|pallas, "
+                             f"got {decode_kernel}")
+        if kv_layout != "paged":
+            if decode_kernel != "reference":
+                raise ValueError("decode_kernel='pallas' targets the paged "
+                                 "block pool; use kv_layout='paged'")
+            if fused_tokens > 1:
+                raise ValueError("fused multi-token decode scans the paged "
+                                 "decode step; use kv_layout='paged'")
         self.kv_layout = kv_layout
+        self.decode_kernel = decode_kernel
+        self.fused_tokens = int(fused_tokens)
+        self._decode_fused = None
         self.block_size = block_size
         self.manager: Optional[KVCacheManager] = None
         if kv_layout == "paged":
@@ -110,9 +145,15 @@ class ServeEngine:
             # Retired/empty slots are all-zero -> the reserved null block
             self.table = np.zeros((batch_slots, nb), np.int32)
             self._slot_blocks: List[List[int]] = [[] for _ in range(batch_slots)]
-            self._decode_tok = jax.jit(build_decode_paged(cfg, window=window))
+            self._decode_tok = jax.jit(build_decode_paged(
+                cfg, window=window, kernel=decode_kernel))
             self._decode_lg = jax.jit(build_decode_paged(
-                cfg, window=window, return_logits=True))
+                cfg, window=window, return_logits=True,
+                kernel=decode_kernel))
+            if self.fused_tokens > 1:
+                self._decode_fused = jax.jit(build_decode_fused(
+                    cfg, self.fused_tokens, window=window,
+                    kernel=decode_kernel))
         else:
             self.cache = T.init_cache(cfg, batch_slots, cache_len)
             self._decode_tok = jax.jit(build_decode(cfg, window=window))
@@ -422,7 +463,10 @@ class ServeEngine:
 
     # ------------------------------------------------------------- run
     def step(self) -> int:
-        """Admit + one lockstep decode over active slots. Returns #active."""
+        """Admit + one lockstep decode over active slots. Returns #active.
+        On a fused engine (fused_tokens > 1) an all-greedy batch advances
+        up to fused_tokens positions in this one call; any slot needing
+        host-side sampling falls the batch back to single-token dispatch."""
         self._admit()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
@@ -432,6 +476,13 @@ class ServeEngine:
             toks[s, 0] = self.active[s].output[-1]
         pos = np.maximum(self.pos + 1, 0).astype(np.int32)
         greedy_batch = all(self.active[s].sampling.is_greedy for s in live)
+        if self._decode_fused is not None and greedy_batch and \
+                2 * max(self.budget[s] for s in live) > self.fused_tokens:
+            # request endgame guard: the scan always runs fused_tokens full
+            # forwards, so once every live slot would go dead within the
+            # first half of the burst, the wasted null-page forwards cost
+            # more than the host round-trips saved — finish single-step
+            return self._step_fused(live, toks, pos)
         decode = self._decode_tok if greedy_batch else self._decode_lg
         if self.kv_layout == "paged":
             # no merge needed: every live slot scatters exactly into its
@@ -458,6 +509,43 @@ class ServeEngine:
             if not hit_eos:
                 self._emit(req, tok)
             if hit_eos or self.budget[s] <= 0:
+                self._retire(s)
+        return len(live)
+
+    def _step_fused(self, live, toks, pos) -> int:
+        """One fused dispatch: up to fused_tokens greedy decode steps in a
+        single jitted scan. EOS and per-slot budgets are masked in-jit (a
+        dead slot's writes are redirected to the null page); this method
+        reconciles the device's view back into host bookkeeping — tokens
+        emitted per slot, pos/budget advanced by the steps actually taken,
+        finished slots retired."""
+        eos = np.full((self.slots,), -1, np.int32)
+        steps = np.zeros((self.slots,), np.int32)
+        alive = np.zeros((self.slots,), bool)
+        for s in live:
+            req = self.active[s]
+            if req.eos_id is not None:
+                eos[s] = req.eos_id
+            steps[s] = self.budget[s]
+            alive[s] = True
+        emitted, live_out, steps_out, self.cache = self._decode_fused(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+            jnp.asarray(self.table), jnp.asarray(eos), jnp.asarray(alive),
+            jnp.asarray(steps))
+        emitted = np.asarray(emitted)
+        live_out = np.asarray(live_out)
+        steps_out = np.asarray(steps_out)
+        for s in live:
+            req = self.active[s]
+            used = int(steps[s] - steps_out[s])
+            self.pos[s] += used
+            self.budget[s] -= used
+            for t in range(emitted.shape[0]):
+                tok = int(emitted[t, s])
+                if tok < 0:
+                    break
+                self._emit(req, tok)
+            if not live_out[s]:
                 self._retire(s)
         return len(live)
 

@@ -54,19 +54,73 @@ def bucket_len(n: int, cap: int) -> int:
     return b
 
 
-def build_decode_paged(cfg, *, window=None, return_logits: bool = False):
-    """Decode over block tables: gather each slot's KV pages from the pool,
-    scatter the new token's K/V back into its frontier page (see
-    `transformer.decode_step_paged`). Same (token|logits, cache) contract
-    as `build_decode`, with the extra `table` operand."""
+def build_decode_paged(cfg, *, window=None, return_logits: bool = False,
+                       kernel: str = "reference"):
+    """Decode over block tables: scatter the new token's K/V into its
+    frontier page, then attend over the slot's page chain (see
+    `transformer.decode_step_paged`). `kernel` picks the attention read:
+    "reference" gathers the chain into a dense view (CPU oracle path),
+    "pallas" streams pages from the pool (kernels/paged_attention). Same
+    (token|logits, cache) contract as `build_decode`, with the extra
+    `table` operand."""
     def decode(params, tokens, pos, cache, table):
         logits, cache = T.decode_step_paged(params, cfg, tokens, pos, cache,
-                                            table, window=window)
+                                            table, window=window,
+                                            kernel=kernel)
         if return_logits:
             return logits[:, -1, :], cache
         next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return next_tok, cache
     return decode
+
+
+def build_decode_fused(cfg, n_tokens: int, *, window=None,
+                       kernel: str = "reference"):
+    """Multi-token greedy decode in one dispatch: `lax.scan` over
+    `n_tokens` paged decode steps, hoisting the per-token host round-trip
+    (the engine's step loop paid one jit dispatch + one device->host token
+    transfer per generated token).
+
+    All sequencing normally done by the engine host-side happens in-jit:
+    each iteration writes the carried token at its slot's position,
+    argmaxes the next one, and masks the slot dead on EOS or exhausted
+    budget. Dead slots keep scanning harmlessly — their table rows are
+    swapped for the all-zero row, so their lockstep writes land in the
+    reserved null page and their emitted tokens read -1.
+
+    fused(params, tokens, pos, cache, table, eos, live, steps) ->
+        (emitted, live, steps, cache)
+      tokens (B,1) int32: last emitted token per slot
+      pos    (B,)  int32: position that token will be written at
+      eos    (B,)  int32: per-slot EOS id, -1 = no EOS
+      live   (B,)  bool:  slots participating in this dispatch
+      steps  (B,)  int32: per-slot remaining token budget
+      emitted (n_tokens, B) int32: generated tokens, -1 past a slot's end
+    The engine reconciles on exit: per slot it consumes emitted tokens up
+    to the first -1, advances pos/budget by the steps actually taken
+    (steps_in - steps_out), and retires slots whose live flag dropped.
+    Greedy-only: any slot needing host-side sampling makes the engine fall
+    back to single-token dispatch."""
+    def fused(params, tokens, pos, cache, table, eos, live, steps):
+        def body(carry, _):
+            tok, p, lv, st, cache = carry
+            tbl = jnp.where(lv[:, None], table, 0)
+            logits, cache = T.decode_step_paged(params, cfg, tok, p, cache,
+                                                tbl, window=window,
+                                                kernel=kernel)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            hit_eos = lv & (eos >= 0) & (nxt == eos)
+            emit = jnp.where(lv & ~hit_eos, nxt, -1)
+            st = jnp.where(lv, st - 1, st)
+            lv = lv & ~hit_eos & (st > 0)
+            tok = jnp.where(lv, nxt, tok[:, 0])[:, None]
+            p = jnp.where(lv, p + 1, p)
+            return (tok, p, lv, st, cache), emit
+
+        (_, _, live, steps, cache), emitted = jax.lax.scan(
+            body, (tokens, pos, live, steps, cache), None, length=n_tokens)
+        return emitted, live, steps, cache
+    return fused
 
 
 def build_prefill_paged(cfg, *, window=None, return_logits: bool = False):

@@ -155,6 +155,79 @@ def test_paged_requires_pure_attention():
                     block_size=BS)
 
 
+# ------------------------------------------------- decode kernel / fused
+
+def test_pallas_kernel_matches_dense(model):
+    """decode_kernel='pallas' (interpret mode on CPU) is token-identical to
+    the dense layout end-to-end — the savings are not bought with wrong
+    attention."""
+    dense = _outputs(_engine(model, kv="dense"), PROMPTS[:2], max_new=4)
+    paged = _outputs(_engine(model, decode_kernel="pallas"), PROMPTS[:2],
+                     max_new=4)
+    assert paged == dense
+
+
+def test_fused_decode_matches_single_step_greedy(model):
+    """The fused multi-token scan is pure dispatch hoisting: greedy outputs
+    (heterogeneous budgets included) are token-identical to single-step."""
+    single = _engine(model)
+    fused = _engine(model, fused_tokens=4)
+    reqs_s = [single.submit(p, max_new_tokens=3 + 2 * i)
+              for i, p in enumerate(PROMPTS)]
+    reqs_f = [fused.submit(p, max_new_tokens=3 + 2 * i)
+              for i, p in enumerate(PROMPTS)]
+    single.run()
+    fused.run()
+    assert [r.output for r in reqs_f] == [r.output for r in reqs_s]
+
+
+def test_fused_decode_respects_eos(model):
+    """EOS is masked in-jit: pick an eos id actually generated mid-stream
+    and check the fused engine stops exactly where single-step does."""
+    probe = _outputs(_engine(model), [PROMPTS[0]], max_new=8)[0]
+    eos = probe[len(probe) // 2]
+    single = _engine(model)
+    fused = _engine(model, fused_tokens=8)
+    r_s = single.submit(PROMPTS[0], max_new_tokens=8, eos_id=eos)
+    r_f = fused.submit(PROMPTS[0], max_new_tokens=8, eos_id=eos)
+    single.run()
+    fused.run()
+    assert r_f.output == r_s.output and len(r_f.output) < len(probe)
+
+
+def test_fused_decode_mixed_sampler_falls_back(model):
+    """A batch with any sampled slot drops to single-token dispatch; the
+    outputs (greedy and seeded-sampled alike) still match the non-fused
+    engine."""
+    sp = SamplingParams(temperature=0.7, top_k=7, seed=3)
+    for eng in (plain := _engine(model), fus := _engine(model,
+                                                       fused_tokens=4)):
+        eng.submit(PROMPTS[0], max_new_tokens=6)                 # greedy
+        eng.submit(PROMPTS[1], max_new_tokens=6, sampling=sp)    # sampled
+    outs = {id(e): [r.output for r in e.run()] for e in (plain, fus)}
+    assert outs[id(fus)] == outs[id(plain)]
+
+
+def test_fused_streams_tokens_through_hooks(model):
+    """on_token still fires once per generated token (in bursts of up to
+    fused_tokens per dispatch)."""
+    eng = _engine(model, fused_tokens=4)
+    seen = []
+    eng.on_token = lambda req, tok: seen.append((req.request_id, tok))
+    reqs = [eng.submit(p, max_new_tokens=5) for p in PROMPTS[:2]]
+    eng.run()
+    for r in reqs:
+        assert [t for i, t in seen if i == r.request_id] == r.output
+
+
+def test_fused_requires_paged_layout(model):
+    params, cfg = model
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, kv_layout="dense", fused_tokens=4)
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, kv_layout="dense", decode_kernel="pallas")
+
+
 # ------------------------------------------------------------- bucketing
 
 def test_bucket_len():
