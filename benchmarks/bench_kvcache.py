@@ -53,7 +53,7 @@ def run(smoke: bool = False) -> list:
     cfg = registry.get("qwen3-1.7b", reduced=True)
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
     out, json_rows = [], []
-    for ci, (n_req, plen, slen) in enumerate(cells):
+    for n_req, plen, slen in cells:
         prompts = _workload(n_req, plen, slen, cfg.vocab_size)
         cache_len = plen + slen + max_new
         cache_len += (-cache_len) % BLOCK          # block-aligned
@@ -67,19 +67,10 @@ def run(smoke: bool = False) -> list:
         if p_out != d_out:
             raise AssertionError(
                 f"paged decode diverged from dense on cell {(n_req, plen)}")
-        if ci == 0:
-            # the fused Pallas decode kernel must not change a single
-            # token either; checked on the smallest cell only (interpret
-            # mode runs the kernel body in Python per page)
-            pallas = ServeEngine(params, cfg, batch_slots=SLOTS,
-                                 cache_len=cache_len, prefill_mode="bulk",
-                                 kv_layout="paged", block_size=BLOCK,
-                                 decode_kernel="pallas")
-            k_out, _ = _drive(pallas, prompts, max_new)
-            if k_out != d_out:
-                raise AssertionError(
-                    f"pallas decode kernel diverged from dense on cell "
-                    f"{(n_req, plen)}")
+        # (per-kernel/per-path output parity is no longer re-proven here:
+        # tests/test_decode_parity.py sweeps the full decode-path x
+        # sampler matrix; this bench keeps only the dense/paged check its
+        # own savings claim depends on)
         m = paged.cache_metrics.as_dict()
         saving = dense.prefill_tokens_computed / \
             max(paged.prefill_tokens_computed, 1)
@@ -102,7 +93,7 @@ def run(smoke: bool = False) -> list:
             "paged_prefill_tokens": paged.prefill_tokens_computed,
             "prefill_savings_x": saving,
             "dense_wall_s": d_dt, "paged_wall_s": p_dt,
-            "outputs_match": True, "pallas_kernel_checked": ci == 0,
+            "outputs_match": True,
             **{f"kv_{k}": v for k, v in m.items()},
         })
     write_bench_json("kvcache", json_rows,

@@ -26,6 +26,7 @@ MODULES = [
     ("gateway", "benchmarks.bench_gateway"),
     ("kvcache", "benchmarks.bench_kvcache"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("specdec", "benchmarks.bench_specdec"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -122,15 +122,28 @@ def kvcache_summary_table(kv: Dict[str, float]) -> str:
     return _metric_table(kv, ("kv cache metric", "value"))
 
 
+def spec_summary_table(spec: Dict[str, float]) -> str:
+    """Markdown table of the speculative-decoding counters
+    (`ServeEngine.spec_metrics`, aggregated across replicas by
+    `Gateway.spec_summary`). acceptance_rate is the headline: the fraction
+    of drafted tokens the target model verified; tokens_per_dispatch is
+    the realized decode speedup lever (accepted drafts + bonus token per
+    verify forward)."""
+    return _metric_table(spec, ("speculation metric", "value"))
+
+
 def gateway_dashboard(summary: Dict[str, float],
                       gauges: Sequence[Tuple[float, int, int]],
-                      kvcache: Optional[Dict[str, float]] = None) -> str:
+                      kvcache: Optional[Dict[str, float]] = None,
+                      spec: Optional[Dict[str, float]] = None) -> str:
     """Full text dashboard: summary table + queue-depth-over-time (Fig 6
     shape) + slot-occupancy-over-time (Fig 7 shape, worker status) +
-    optional paged KV-cache counters."""
+    optional paged KV-cache and speculative-decoding counters."""
     parts = ["## gateway summary", gateway_summary_table(summary)]
     if kvcache:
         parts += ["\n## kv cache (paged)", kvcache_summary_table(kvcache)]
+    if spec:
+        parts += ["\n## speculative decode", spec_summary_table(spec)]
     depth = gauge_series(gauges, 1)
     if depth:
         parts += ["\n## queue depth (Fig 6)",

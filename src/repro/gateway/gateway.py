@@ -236,13 +236,15 @@ class Gateway:
               kv_layout: str = "dense", block_size: int = 16,
               pool_blocks: Optional[int] = None,
               decode_kernel: str = "reference", fused_tokens: int = 1,
+              spec_tokens: int = 0, drafter=None,
               **kw) -> "Gateway":
         engines = [ServeEngine(params, cfg, batch_slots=batch_slots,
                                cache_len=cache_len, window=window,
                                prefill_mode=prefill_mode, kv_layout=kv_layout,
                                block_size=block_size, pool_blocks=pool_blocks,
                                decode_kernel=decode_kernel,
-                               fused_tokens=fused_tokens)
+                               fused_tokens=fused_tokens,
+                               spec_tokens=spec_tokens, drafter=drafter)
                    for _ in range(replicas)]
         return cls(engines, **kw)
 
@@ -548,3 +550,25 @@ class Gateway:
         for m in ms[1:]:
             agg = agg.merge(m)
         return agg.as_dict()
+
+    def spec_summary(self) -> Optional[dict]:
+        """Aggregated speculative-decoding counters over every replica
+        running with spec_tokens > 0 (None when none do): fleet-level
+        acceptance rate and realized tokens-per-dispatch for the
+        dashboard's speculation section."""
+        ms = [r.engine.spec_metrics for r in self.replicas
+              if r.engine.spec_metrics is not None]
+        if not ms:
+            return None
+        agg = {k: sum(m[k] for m in ms)
+               for k in ("dispatches", "tokens_drafted", "tokens_accepted",
+                         "tokens_emitted", "tokens_rolled_back")}
+        agg["spec_tokens"] = ms[0]["spec_tokens"]
+        agg["drafter"] = ms[0]["drafter"]
+        agg["acceptance_rate"] = (agg["tokens_accepted"]
+                                  / agg["tokens_drafted"]
+                                  if agg["tokens_drafted"] else 0.0)
+        agg["tokens_per_dispatch"] = (agg["tokens_emitted"]
+                                      / agg["dispatches"]
+                                      if agg["dispatches"] else 0.0)
+        return agg

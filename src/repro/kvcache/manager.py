@@ -88,9 +88,12 @@ class KVCacheManager:
 
         need = n_new - self.pool.free_count()
         if need > 0:
-            # don't flush the cache for a request that cannot fit anyway
-            idle = sum(1 for b in self.radix.all_blocks()
-                       if self.pool.ref(b) == 1)
+            # don't flush the cache for a request that cannot fit anyway.
+            # Exact count: an idle block buried under an in-use descendant
+            # is NOT reclaimable (evict only trims chain tails), so the
+            # naive ref==1 scan would evict less than promised here and
+            # fail the alloc below anyway
+            idle = self.radix.evictable_blocks()
             if need > idle:
                 unpin()
                 raise PoolExhausted(
@@ -136,19 +139,58 @@ class KVCacheManager:
         radix tree survive (refcount held by the tree) — that is the cache."""
         self.pool.decref(blocks)
 
+    def rollback(self, blocks: List[int], n_valid: int, n_written: int,
+                 *, shared=None):
+        """Speculative decode rejected written tokens: positions
+        [n_valid, n_written) of the chain hold KV that must never be
+        attended again. The paged layout makes this O(1) device-side — the
+        frontier rewind alone hides the stale rows (every read masks
+        ``kv_pos <= pos``) — so rollback here is the *safety half* of the
+        contract: the trimmed page range must be exclusively owned by the
+        rolling-back request. A radix-indexed (shared) page in that range
+        means unverified tokens were committed, or a CoW clone was skipped —
+        either way another chain would silently attend garbage, so raise
+        instead of corrupting the cache. Returns the trimmed page ids.
+
+        `shared` lets a caller rolling back many slots in one dispatch
+        precompute set(radix.all_blocks()) once instead of paying the
+        O(tree) walk per slot (the engine's _step_spec does).
+        """
+        if not 0 <= n_valid <= n_written:
+            raise ValueError(f"rollback range [{n_valid}, {n_written})")
+        bs = self.pool.block_size
+        first = n_valid // bs                   # page holding 1st stale row
+        last = min(-(-n_written // bs), len(blocks))
+        dirty = blocks[first:last]
+        if dirty:
+            if shared is None:
+                shared = set(self.radix.all_blocks())
+            for b in dirty:
+                if b == self.pool.NULL_BLOCK:   # overflow writes land here
+                    continue
+                if b in shared:
+                    raise ValueError(
+                        f"rollback would trim radix-shared block {b} "
+                        f"(speculative tokens must never be committed)")
+                if self.pool.ref(b) < 1:
+                    raise ValueError(f"rollback of freed block {b}")
+        self.metrics.rollbacks += 1
+        self.metrics.tokens_rolled_back += n_written - n_valid
+        return dirty
+
+    def free_tokens(self) -> int:
+        """Token capacity available without displacing a running request:
+        free blocks plus cached chains eviction can actually reclaim
+        (exact — ``RadixTree.evictable_blocks`` walks chain tails, so an
+        idle block pinned under an in-use descendant is not counted)."""
+        return (self.pool.free_count()
+                + self.radix.evictable_blocks()) * self.pool.block_size
+
     # ------------------------------------------------------------- queries
     def match_len(self, prompt) -> int:
         """Cached-prefix probe (tokens), without touching LRU recency —
         the gateway's prefix-affinity policy calls this on every replica."""
         return self.radix.match_len(prompt, peek=True)
-
-    def free_tokens(self) -> int:
-        """Token capacity available without displacing a running request:
-        free blocks plus cached chains nobody is using (estimate — inner
-        radix nodes free only after their descendants)."""
-        idle_cached = sum(1 for b in self.radix.all_blocks()
-                          if self.pool.ref(b) == 1)
-        return (self.pool.free_count() + idle_cached) * self.pool.block_size
 
     def check_invariants(self):
         self.pool.check_invariants()

@@ -21,6 +21,8 @@ class CacheMetrics:
     blocks_evicted: int = 0     # pool blocks reclaimed from the radix tree
     cow_copies: int = 0         # partial-block reuses (copy-on-write clones)
     inserts: int = 0            # blocks newly indexed by the radix tree
+    rollbacks: int = 0          # speculative-decode rejections rolled back
+    tokens_rolled_back: int = 0 # written-then-rejected draft tokens
 
     @property
     def lookups(self) -> int:
@@ -46,6 +48,8 @@ class CacheMetrics:
             "blocks_evicted": self.blocks_evicted,
             "cow_copies": self.cow_copies,
             "inserts": self.inserts,
+            "rollbacks": self.rollbacks,
+            "tokens_rolled_back": self.tokens_rolled_back,
         }
 
     def merge(self, other: "CacheMetrics") -> "CacheMetrics":
@@ -58,4 +62,7 @@ class CacheMetrics:
             blocks_evicted=self.blocks_evicted + other.blocks_evicted,
             cow_copies=self.cow_copies + other.cow_copies,
             inserts=self.inserts + other.inserts,
+            rollbacks=self.rollbacks + other.rollbacks,
+            tokens_rolled_back=self.tokens_rolled_back
+            + other.tokens_rolled_back,
         )

@@ -202,6 +202,30 @@ class RadixTree:
                     k for k, v in node.parent.children.items() if v is node)]
         return freed
 
+    def evictable_blocks(self) -> int:
+        """Exactly how many tree blocks ``evict`` could free right now.
+
+        Not the same as "blocks with refcount 1": eviction only trims chain
+        *tails* (a block frees only after every block deeper in its chain —
+        later in its node, and in every descendant node — is freed), so an
+        idle inner block pinned under an in-use descendant is unreachable.
+        Counting those would over-report free capacity and let admission
+        over-commit (the gateway's token-budget check consumes this number).
+        """
+        def walk(node: _Node):
+            # (evictable blocks in subtree, subtree fully evictable?)
+            total, descendants_clear = 0, True
+            for child in node.children.values():
+                t, f = walk(child)
+                total += t
+                descendants_clear &= f
+            if not descendants_clear:
+                return total, False
+            tail = self._evictable_tail(node)
+            return total + tail, tail == len(node.blocks)
+
+        return walk(self.root)[0]
+
     # ----------------------------------------------------------------- info
     def _leaves(self) -> List[_Node]:
         out, stack = [], [self.root]

@@ -43,6 +43,15 @@ def main():
                     help="> 1 scans this many greedy decode steps per jit "
                     "dispatch on the paged layout (one host round-trip "
                     "per burst instead of per token)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help=">= 1 enables speculative decoding on the paged "
+                    "layout: draft this many tokens per slot, verify all "
+                    "of them in one batched forward, roll rejects back at "
+                    "block granularity (greedy requests only)")
+    ap.add_argument("--drafter", default="ngram",
+                    help="draft proposer for --spec-tokens: 'ngram[:n]' "
+                    "(self-speculative prompt lookup) or 'model:<arch_id>' "
+                    "(small draft LM from the config registry)")
     ap.add_argument("--admit-budget", type=int, default=None,
                     help="admission control by token budget: total "
                     "prompt+max_new tokens the fleet may have committed at "
@@ -73,6 +82,7 @@ def main():
                        pool_blocks=args.pool_blocks,
                        decode_kernel=args.decode_kernel,
                        fused_tokens=args.fused_tokens,
+                       spec_tokens=args.spec_tokens, drafter=args.drafter,
                        admit_budget=args.admit_budget)
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
                for i in range(args.requests)]
@@ -106,8 +116,15 @@ def main():
               f"reused={kv['tokens_reused']} "
               f"computed={kv['tokens_computed']} "
               f"evicted={kv['blocks_evicted']} cow={kv['cow_copies']}")
+    spec = gw.spec_summary()
+    if spec is not None:
+        print(f"[serve] specdec drafter={spec['drafter']} "
+              f"acceptance={spec['acceptance_rate']:.2f} "
+              f"tok/dispatch={spec['tokens_per_dispatch']:.2f} "
+              f"rolled_back={spec['tokens_rolled_back']}")
     if args.dashboard:
-        print(reporting.gateway_dashboard(s, gw.metrics.gauges, kvcache=kv))
+        print(reporting.gateway_dashboard(s, gw.metrics.gauges, kvcache=kv,
+                                          spec=spec))
 
 
 if __name__ == "__main__":

@@ -263,6 +263,58 @@ def attention_decode_paged(params, cfg, x, pos, kpool, vpool, table, *,
     return out, kpool, vpool
 
 
+def attention_verify_paged(params, cfg, x, pos, kpool, vpool, table, *,
+                           window=None, rope=True):
+    """Multi-token batched decode over a paged cache — the speculative-
+    decoding verify forward. Every slot advances T positions at once:
+    slot s's tokens sit at absolute positions pos[s] + [0, T), their K/V
+    are scattered into the slot's pages first, then all T queries attend
+    the full chain (causal by absolute position, so draft token j sees the
+    resident prefix plus drafts 0..j — one forward replaces T sequential
+    decode steps).
+
+    x: (B, T, d); pos: (B,) absolute position of each slot's first token.
+    kpool/vpool: (P, bs, nkv, hd); table: (B, nb). Returns
+    (out (B, T, d), new_kpool, new_vpool).
+
+    Positions that overflow the slot's table span (a draft burst near the
+    request's token budget) scatter into the reserved null block 0 instead
+    of clamping onto a live page; their outputs are garbage the caller's
+    acceptance mask never reads. Uses the dense-gather read (the oracle
+    path) — a multi-query Pallas verify kernel is a named follow-up.
+    """
+    B, T, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    bs = kpool.shape[1]
+    nb = table.shape[1]
+    q = (x @ params["wq"]).reshape(B, T, nh, hd)
+    k = (x @ params["wk"]).reshape(B, T, nkv, hd)
+    v = (x @ params["wv"]).reshape(B, T, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    q_pos = pos[:, None] + jnp.arange(T)[None, :]                # (B, T)
+    if rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    in_span = q_pos < nb * bs
+    page = jnp.clip(q_pos // bs, 0, nb - 1)
+    blk = jnp.where(in_span, jnp.take_along_axis(table, page, axis=1), 0)
+    off = jnp.where(in_span, q_pos % bs, 0)
+    kpool = kpool.at[blk, off].set(k)
+    vpool = vpool.at[blk, off].set(v)
+    kall = jnp.take(kpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
+    vall = jnp.take(vpool, table, axis=0).reshape(B, nb * bs, nkv, hd)
+    kv_pos = jnp.arange(nb * bs)
+    mask = kv_pos[None, None, :] <= q_pos[:, :, None]            # (B, T, Sk)
+    if window is not None:
+        mask &= kv_pos[None, None, :] > (q_pos[:, :, None] - window)
+    mask &= jnp.repeat(table != 0, bs, axis=1)[:, None, :]       # null pages
+    scale = 1.0 / math.sqrt(hd)
+    out = _sdpa_xla(q, kall, vall, mask, scale)
+    return out.reshape(B, T, nh * hd) @ params["wo"], kpool, vpool
+
+
 def attention_prefill_paged(params, cfg, x, q_pos, n_tok, kpool, vpool,
                             table, *, window=None, rope=True):
     """Suffix prefill over a paged cache: run `n_tok` real tokens (of the

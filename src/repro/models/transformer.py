@@ -493,6 +493,60 @@ def decode_step_paged(params, cfg, tokens, pos, cache, table, window=None,
                                      "tail": tuple(new_tail)}
 
 
+def _layer_verify_paged(lp, cfg, x, pos, pool, table, window):
+    h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
+    att, ck, cv = L.attention_verify_paged(
+        lp["attn"], cfg, h, pos, pool["k"], pool["v"], table, window=window)
+    x = x + att
+    h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
+    ff, _ = _ffn_apply(lp, cfg, h)
+    return x + ff, {"k": ck, "v": cv}
+
+
+def verify_step_paged(params, cfg, tokens, pos, cache, table, window=None):
+    """Multi-token `decode_step_paged`: the speculative-decoding verify
+    forward. tokens: (B, T) — slot s's tokens occupy absolute positions
+    pos[s] + [0, T); all T tokens' K/V are written into the slot's pages
+    and all T positions' logits come back from one forward (causal within
+    the burst via absolute positions). Returns (logits (B, T, V),
+    new_cache). The caller decides afterwards which written positions
+    survive (acceptance) and rewinds its frontier past the rest — stale
+    rows beyond the frontier are masked by every subsequent read."""
+    window = cfg.window if window is None else window
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    def block_fn(h, xs):
+        bp, bpool = xs
+        new_pools = []
+        for i in range(len(cfg.block_pattern)):
+            h, np_ = _layer_verify_paged(bp[i], cfg, h, pos, bpool[i],
+                                         table, window)
+            new_pools.append(np_)
+        return h, tuple(new_pools)
+
+    new_blocks = None
+    if cfg.n_blocks > 0 and "blocks" in params:
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        else:
+            ys = []
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["blocks"], cache["blocks"]))
+                x, y = block_fn(x, xs_i)
+                ys.append(y)
+            new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    new_tail = []
+    for i in range(len(cfg.tail_pattern)):
+        x, nc = _layer_verify_paged(params["tail"][i], cfg, x, pos,
+                                    cache["tail"][i], table, window)
+        new_tail.append(nc)
+    x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), {"blocks": new_blocks,
+                                     "tail": tuple(new_tail)}
+
+
 def _layer_prefill_paged(lp, cfg, x, q_pos, n_tok, pool, table, window):
     h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
     att, ck, cv = L.attention_prefill_paged(

@@ -1,0 +1,144 @@
+"""Draft-token proposers for speculative decoding.
+
+Speculative decoding splits each decode step into *propose* (cheap guess
+of the next K tokens) and *verify* (one batched forward of the real model
+over all K guesses at once — `serve.step.build_decode_spec`). The drafter
+only has to be right often enough to amortize the verify forward; it is
+never allowed to change outputs, because the verify pass accepts exactly
+the prefix of guesses the target model would itself have produced.
+
+Two reference drafters ship here:
+
+  * `NGramDrafter` — self-speculative prompt-lookup: propose the tokens
+    that followed the most recent occurrence of the context's trailing
+    n-gram. Zero model cost, zero state, surprisingly strong on
+    repetitive traffic (code, templated text, greedy loops).
+  * `ModelDrafter` — a small draft LM proposes greedily. Any registry
+    arch works (`make_drafter("model:<arch_id>")` builds the reduced
+    config); pass explicit (params, cfg) to use trained weights — or the
+    target's own weights for a guaranteed-acceptance harness in tests.
+
+`make_drafter` is the string-spec factory the engine/launcher use:
+"ngram", "ngram:<n>", "model:<arch_id>" (config-registry lookup).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class Drafter(Protocol):
+    """Proposes `k` draft tokens continuing `ctx` (prompt + output so
+    far). Must return exactly k ints and must be deterministic — the
+    verify pass guarantees correctness, the drafter only sets the
+    acceptance rate."""
+    name: str
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]: ...
+
+
+class NGramDrafter:
+    """Prompt-lookup decoding: find the latest earlier occurrence of the
+    context's trailing n-gram (longest n first) and propose the tokens
+    that followed it. Falls back to repeating the last token when nothing
+    matches — a wrong guess costs one rejected draft, never a wrong
+    output."""
+
+    def __init__(self, n: int = 3):
+        if n < 1:
+            raise ValueError("ngram order must be >= 1")
+        self.n = n
+        self.name = f"ngram:{n}"
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        ctx = list(ctx)
+        out: List[int] = []
+        if not ctx:
+            return [0] * k
+        for order in range(min(self.n, len(ctx)), 0, -1):
+            pat = ctx[-order:]
+            # latest occurrence strictly before the context's own tail
+            for i in range(len(ctx) - order - 1, -1, -1):
+                if ctx[i:i + order] == pat:
+                    out = ctx[i + order:i + order + k]
+                    break
+            if out:
+                break
+        while len(out) < k:
+            out.append(out[-1] if out else ctx[-1])
+        return out[:k]
+
+
+class ModelDrafter:
+    """Greedy draft proposals from a separate (typically much smaller)
+    LM. The draft model re-prefills the context each proposal — O(ctx)
+    per call, bucketed to bound retraces — then decodes k-1 more tokens
+    against a private dense cache. That is the correctness-first shape:
+    it keeps zero cross-step state, so target-side rollbacks can never
+    desynchronize it. (An incremental draft cache with its own rollback
+    is the named follow-up.)"""
+
+    def __init__(self, params, cfg, *, cache_len: int = 1024,
+                 name: Optional[str] = None):
+        from repro.serve.step import (build_decode, build_prefill_bucketed,
+                                      prefill_into_cache)
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.name = name or f"model:{cfg.arch_id}"
+        self._prefill = jax.jit(build_prefill_bucketed(cfg))
+        self._decode = jax.jit(build_decode(cfg))
+        self._prefill_into_cache = prefill_into_cache
+
+    def propose(self, ctx: Sequence[int], k: int) -> List[int]:
+        from repro.models import transformer as T
+        from repro.serve.step import bucket_len
+        ctx = list(ctx)
+        if not ctx or len(ctx) + k > self.cache_len:
+            return list(ctx[-1:] or [0]) * k        # out of draft range
+        Sb = bucket_len(len(ctx), self.cache_len)
+        toks = jnp.asarray([ctx + [0] * (Sb - len(ctx))], jnp.int32)
+        first, nat = self._prefill(self.params, {"tokens": toks},
+                                   jnp.asarray(len(ctx), jnp.int32))
+        out = [int(first[0])]
+        cache = T.init_cache(self.cfg, 1, self.cache_len)
+        cache = self._prefill_into_cache(self.cfg, nat, cache,
+                                         jnp.asarray([len(ctx)]))
+        pos = len(ctx) - 1
+        while len(out) < k:
+            pos += 1
+            tok, cache = self._decode(
+                self.params, jnp.asarray([[out[-1]]], jnp.int32),
+                jnp.asarray([pos], jnp.int32), cache)
+            out.append(int(tok[0]))
+        return out
+
+
+def make_drafter(spec, *, key=None) -> "Drafter":
+    """Build a drafter from a string spec (or pass an instance through).
+
+    "ngram" / "ngram:<n>"   — self-speculative prompt lookup.
+    "model:<arch_id>"       — reduced config from the registry, randomly
+                              initialized from `key` (PRNGKey(0) default);
+                              real deployments construct ModelDrafter with
+                              trained weights instead.
+    """
+    if spec is None:
+        return NGramDrafter()
+    if not isinstance(spec, str):
+        return spec
+    if spec == "ngram":
+        return NGramDrafter()
+    if spec.startswith("ngram:"):
+        return NGramDrafter(int(spec.split(":", 1)[1]))
+    if spec.startswith("model:"):
+        from repro.configs import registry
+        from repro.models import transformer as T
+        cfg = registry.get(spec.split(":", 1)[1], reduced=True)
+        params = T.init_lm(key if key is not None else jax.random.PRNGKey(0),
+                           cfg)
+        return ModelDrafter(params, cfg, name=spec)
+    raise ValueError(f"unknown drafter spec {spec!r} "
+                     f"(expected ngram[:n] | model:<arch_id>)")

@@ -38,6 +38,21 @@ Two paged-layout decode accelerators stack on top:
     reconciled host-side on exit. Any slot needing host-side sampling
     drops that dispatch back to single-token decode, and `on_token` hooks
     then fire in a burst of up to N tokens per dispatch.
+  * `spec_tokens=K` (K >= 1) adds speculative decoding on top: a drafter
+    (`serve.draft`, default self-speculative n-gram; `drafter=` accepts an
+    instance or a "ngram[:n]" / "model:<arch_id>" spec) proposes K tokens
+    per slot, verified by ONE batched forward over the paged cache
+    (`serve.step.build_decode_spec`) that emits every draft the target
+    model itself would have produced plus the free bonus token — up to
+    K+1 tokens per dispatch, token-identical to greedy single-step by
+    construction. Rejected drafts' KV rows are rolled back at block
+    granularity: the host frontier rewinds (stale rows are masked by
+    every subsequent read, then overwritten) and `KVCacheManager.rollback`
+    checks no radix-shared page is in the trimmed range (copy-on-write
+    safety for prefix chains). Greedy-only like the fused path — sampled
+    slots drop the batch to single-token dispatch — and it takes
+    precedence over `fused_tokens` when both are set. Acceptance-rate
+    counters (`spec_metrics`) feed the gateway dashboard.
 """
 from __future__ import annotations
 
@@ -50,10 +65,12 @@ import numpy as np
 
 from repro.kvcache import KVCacheManager, PoolExhausted
 from repro.models import transformer as T
+from repro.serve.draft import make_drafter
 from repro.serve.sampler import GREEDY, Sampler, SamplingParams
 from repro.serve.step import (build_decode, build_decode_fused,
-                              build_decode_paged, build_prefill_bucketed,
-                              build_prefill_paged, bucket_len)
+                              build_decode_paged, build_decode_spec,
+                              build_prefill_bucketed, build_prefill_paged,
+                              bucket_len)
 
 
 @dataclass
@@ -79,7 +96,8 @@ class ServeEngine:
                  cache_len: int = 256, window=None,
                  prefill_mode: str = "decode", kv_layout: str = "dense",
                  block_size: int = 16, pool_blocks: Optional[int] = None,
-                 decode_kernel: str = "reference", fused_tokens: int = 1):
+                 decode_kernel: str = "reference", fused_tokens: int = 1,
+                 spec_tokens: int = 0, drafter=None):
         """prefill_mode: "decode" feeds prompt tokens one at a time through
         decode_step (simple, exact); "bulk" runs the full-sequence prefill
         kernel once per request and copies the caches into the slot (one
@@ -104,9 +122,11 @@ class ServeEngine:
         pool_blocks sizes the paged pool (default: 2x the slots' worth of
         pages + the null block, so retired prefixes stay cached).
 
-        decode_kernel ("reference"|"pallas") and fused_tokens (> 1 enables
-        the multi-token scan dispatch) accelerate the paged decode path —
-        see the module docstring. Both require kv_layout="paged"."""
+        decode_kernel ("reference"|"pallas"), fused_tokens (> 1 enables
+        the multi-token scan dispatch), and spec_tokens (>= 1 enables
+        speculative draft-verify decode; `drafter` picks the proposer)
+        accelerate the paged decode path — see the module docstring. All
+        require kv_layout="paged"."""
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
@@ -116,6 +136,8 @@ class ServeEngine:
         if decode_kernel not in ("reference", "pallas"):
             raise ValueError(f"decode_kernel must be reference|pallas, "
                              f"got {decode_kernel}")
+        if spec_tokens < 0:
+            raise ValueError(f"spec_tokens must be >= 0, got {spec_tokens}")
         if kv_layout != "paged":
             if decode_kernel != "reference":
                 raise ValueError("decode_kernel='pallas' targets the paged "
@@ -123,10 +145,23 @@ class ServeEngine:
             if fused_tokens > 1:
                 raise ValueError("fused multi-token decode scans the paged "
                                  "decode step; use kv_layout='paged'")
+            if spec_tokens > 0:
+                raise ValueError("speculative decode verifies over (and "
+                                 "rolls back) paged KV; use kv_layout="
+                                 "'paged'")
         self.kv_layout = kv_layout
         self.decode_kernel = decode_kernel
         self.fused_tokens = int(fused_tokens)
+        self.spec_tokens = int(spec_tokens)
+        self.drafter = make_drafter(drafter) if spec_tokens > 0 else None
         self._decode_fused = None
+        self._decode_spec = None
+        # speculative-decode telemetry (gateway dashboard aggregates these)
+        self.spec_dispatches = 0
+        self.spec_tokens_drafted = 0
+        self.spec_tokens_accepted = 0
+        self.spec_tokens_emitted = 0
+        self.spec_tokens_rolled_back = 0
         self.block_size = block_size
         self.manager: Optional[KVCacheManager] = None
         if kv_layout == "paged":
@@ -154,6 +189,9 @@ class ServeEngine:
                 self._decode_fused = jax.jit(build_decode_fused(
                     cfg, self.fused_tokens, window=window,
                     kernel=decode_kernel))
+            if self.spec_tokens > 0:
+                self._decode_spec = jax.jit(build_decode_spec(
+                    cfg, self.spec_tokens, window=window))
         else:
             self.cache = T.init_cache(cfg, batch_slots, cache_len)
             self._decode_tok = jax.jit(build_decode(cfg, window=window))
@@ -476,6 +514,8 @@ class ServeEngine:
             toks[s, 0] = self.active[s].output[-1]
         pos = np.maximum(self.pos + 1, 0).astype(np.int32)
         greedy_batch = all(self.active[s].sampling.is_greedy for s in live)
+        if self._decode_spec is not None and greedy_batch:
+            return self._step_spec(live, toks, pos)
         if self._decode_fused is not None and greedy_batch and \
                 2 * max(self.budget[s] for s in live) > self.fused_tokens:
             # request endgame guard: the scan always runs fused_tokens full
@@ -548,6 +588,91 @@ class ServeEngine:
             if not live_out[s]:
                 self._retire(s)
         return len(live)
+
+    def _step_spec(self, live, toks, pos) -> int:
+        """One speculative dispatch: draft K tokens per live slot (host,
+        `self.drafter`), verify all of them in one batched forward, emit
+        the accepted prefix + bonus token, rewind the frontier past the
+        rejects. Reconciliation mirrors `_step_fused`, plus the rollback:
+        for each slot, positions beyond pos+adv hold rejected-draft KV —
+        `KVCacheManager.rollback` audits the trimmed page range (never
+        radix-shared, never freed) and counts it; device-side the rewind
+        alone suffices because every read masks beyond the frontier."""
+        K = self.spec_tokens
+        # packed per-slot operands: draft | eos | steps | live (see builder)
+        inp = np.zeros((self.slots, K + 3), np.int32)
+        inp[:, K] = -1
+        steps = np.zeros((self.slots,), np.int32)
+        for s in live:
+            req = self.active[s]
+            inp[s, :K] = self.drafter.propose(req.prompt + req.output, K)
+            if req.eos_id is not None:
+                inp[s, K] = req.eos_id
+            inp[s, K + 1] = steps[s] = self.budget[s]
+            inp[s, K + 2] = 1
+        out, self.cache = self._decode_spec(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+            jnp.asarray(self.table), jnp.asarray(inp))
+        out = np.asarray(out)           # one packed transfer (see builder)
+        emitted, adv, n_acc, live_out, steps_out = \
+            out[:K + 1], out[K + 1], out[K + 2], out[K + 3], out[K + 4]
+        self.spec_dispatches += 1
+        # one O(tree) walk per dispatch, not per rolling-back slot: safe
+        # to share across the loop because a retire's commit only indexes
+        # the retiring slot's own pages, which can never sit in another
+        # slot's (private) rollback range
+        shared_blocks = None
+        for s in live:
+            req = self.active[s]
+            p0 = int(pos[s])
+            used = int(steps[s] - steps_out[s])
+            a = int(adv[s])
+            self.spec_tokens_drafted += K
+            self.spec_tokens_accepted += min(int(n_acc[s]), K)
+            self.spec_tokens_emitted += used
+            # the verify forward wrote positions p0..p0+K (span-clamped to
+            # the null page); only p0..p0+a survive acceptance
+            n_written = min(p0 + K, self.cache_len - 1) + 1
+            n_valid = p0 + a + 1
+            if n_written > n_valid:
+                if shared_blocks is None:
+                    shared_blocks = set(self.manager.radix.all_blocks())
+                self.manager.rollback(self._slot_blocks[s], n_valid,
+                                      n_written, shared=shared_blocks)
+                self.spec_tokens_rolled_back += n_written - n_valid
+            self.pos[s] = p0 + a
+            self.budget[s] -= used
+            for t in range(emitted.shape[0]):
+                tok = int(emitted[t, s])
+                if tok < 0:
+                    break
+                self._emit(req, tok)
+            if not live_out[s]:
+                self._retire(s)
+        return len(live)
+
+    @property
+    def spec_metrics(self) -> Optional[dict]:
+        """Speculative-decode counters (None when spec is off): drafted vs
+        accepted sets the acceptance rate; emitted counts the bonus tokens
+        too, so emitted/dispatches is the realized tokens-per-dispatch."""
+        if self.spec_tokens <= 0:
+            return None
+        drafted = self.spec_tokens_drafted
+        return {
+            "spec_tokens": self.spec_tokens,
+            "drafter": getattr(self.drafter, "name", "custom"),
+            "dispatches": self.spec_dispatches,
+            "tokens_drafted": drafted,
+            "tokens_accepted": self.spec_tokens_accepted,
+            "tokens_emitted": self.spec_tokens_emitted,
+            "tokens_rolled_back": self.spec_tokens_rolled_back,
+            "acceptance_rate": (self.spec_tokens_accepted / drafted
+                                if drafted else 0.0),
+            "tokens_per_dispatch": (self.spec_tokens_emitted
+                                    / self.spec_dispatches
+                                    if self.spec_dispatches else 0.0),
+        }
 
     def run(self) -> List[Request]:
         """Drive to completion and return finished requests. Works even on

@@ -123,6 +123,71 @@ def build_decode_fused(cfg, n_tokens: int, *, window=None,
     return fused
 
 
+def build_decode_spec(cfg, k: int, *, window=None):
+    """Speculative draft-verify decode: emit up to k+1 greedy tokens per
+    dispatch from ONE batched forward (`transformer.verify_step_paged`)
+    instead of up to k+1 sequential decode steps.
+
+    Per slot: the carried token t0 (write position p0) plus k drafted
+    tokens run through the model at positions p0..p0+k in a single causal
+    forward; the model's greedy argmax at each position both *verifies*
+    the drafts (draft j is accepted iff it equals the argmax at position
+    j-1, prefix-wise) and supplies the bonus token after the last accepted
+    draft. Acceptance, EOS, and budget masking are all in-jit — the host
+    sees one dispatch and reconciles like the fused path.
+
+    spec(params, tokens, pos, cache, table, inp) -> (out, cache)
+      tokens (B,1) int32: last emitted token per slot (write position pos)
+      inp    (B,k+3) int32, packed per-slot operands (one host->device
+             transfer instead of four — the transfers, not the verify
+             math, dominate small-batch dispatch cost):
+        cols 0..k-1  draft: proposed continuations (serve.draft)
+        col  k       eos, col k+1 steps, col k+2 live (0/1) — as in
+                     `build_decode_fused`
+    `out` is one (k+5, B) int32 array (single device->host transfer):
+      rows 0..k  emitted: accepted+bonus tokens, -1 past a slot's end
+      row  k+1   adv: positions actually advanced = written draft tokens
+                 that remain valid; the engine rewinds its frontier to
+                 pos + adv and rolls the rest back (KVCacheManager.rollback)
+      row  k+2   n_acc: raw drafts matching the model (acceptance-rate
+                 telemetry, before EOS/budget truncation)
+      row  k+3   live (0/1) and row k+4 steps: as in the fused path
+    Rejected drafts' KV rows (positions beyond pos+adv) stay in the pool
+    but every read masks `kv_pos <= frontier`, so the frontier rewind IS
+    the rollback device-side; the next dispatch overwrites them."""
+    def spec(params, tokens, pos, cache, table, inp):
+        draft = inp[:, :k]
+        eos = inp[:, k]
+        steps = inp[:, k + 1]
+        live = inp[:, k + 2].astype(bool)
+        tbl = jnp.where(live[:, None], table, 0)
+        seq = jnp.concatenate([tokens, draft], axis=1)        # (B, k+1)
+        logits, cache = T.verify_step_paged(params, cfg, seq, pos, cache,
+                                            tbl, window=window)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B, k+1)
+        # drafts accepted prefix-wise: draft j valid iff it equals the
+        # model's next-token at the previous position
+        acc = jnp.cumprod((draft == g[:, :-1]).astype(jnp.int32), axis=1)
+        n_acc = acc.sum(axis=1)                               # (B,)
+        j = jnp.arange(k + 1)[None, :]
+        cand = (j <= n_acc[:, None]) & (j < steps[:, None]) & live[:, None]
+        is_eos = (eos[:, None] >= 0) & (g == eos[:, None])
+        # an EOS candidate stops emission at itself (EOS is never emitted)
+        blocked = jnp.cumsum((cand & is_eos).astype(jnp.int32), axis=1) > 0
+        keep = cand & ~blocked
+        emitted = jnp.where(keep, g, -1).T                    # (k+1, B)
+        n_emit = keep.sum(axis=1)
+        adv = jnp.minimum(n_emit, n_acc)
+        hit_eos = (cand & is_eos).any(axis=1)
+        steps = steps - n_emit
+        live = live & ~hit_eos & (steps > 0)
+        out = jnp.concatenate(
+            [emitted, adv[None], n_acc[None], live[None].astype(jnp.int32),
+             steps[None]], axis=0)
+        return out, cache
+    return spec
+
+
 def build_prefill_paged(cfg, *, window=None, return_logits: bool = False):
     """Suffix-only prefill on a prefix-cache hit: `tokens` (1, S_bucket) are
     the uncached prompt tail starting at absolute position `start`

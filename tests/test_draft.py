@@ -1,0 +1,78 @@
+"""Drafter unit tests: n-gram prompt-lookup proposals, the model drafter's
+greedy equivalence, and the string-spec factory. Output correctness of
+speculation as a whole is the parity matrix's job (test_decode_parity) —
+here we pin the proposers' own contracts: exact-k, deterministic,
+longest-match-first."""
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve.draft import ModelDrafter, NGramDrafter, make_drafter
+from repro.serve.engine import ServeEngine
+
+
+def test_ngram_proposes_continuation_of_last_match():
+    d = NGramDrafter(n=3)
+    #            0  1  2  3  4  5  6  7
+    ctx = [5, 6, 7, 9, 5, 6, 7, 8, 5, 6, 7]
+    # trailing 3-gram (5,6,7) last occurred at index 4..6, followed by 8
+    assert d.propose(ctx, 2) == [8, 5]
+    # k beyond the known continuation pads by repeating the last proposal
+    assert d.propose(ctx, 6) == [8, 5, 6, 7, 7, 7]
+
+
+def test_ngram_prefers_longest_order_then_falls_back():
+    d = NGramDrafter(n=3)
+    # no 3- or 2-gram repeat; 1-gram 4 seen earlier followed by 2
+    assert d.propose([4, 2, 9, 4], 2) == [2, 9]
+    # nothing repeats at all: repeat the last token, never crash
+    assert d.propose([1, 2, 3], 3) == [3, 3, 3]
+    assert d.propose([], 2) == [0, 0]
+    with pytest.raises(ValueError):
+        NGramDrafter(n=0)
+
+
+def test_ngram_is_deterministic():
+    d = NGramDrafter()
+    ctx = [1, 2, 1, 2, 1]
+    assert d.propose(ctx, 4) == d.propose(ctx, 4)
+
+
+def test_model_drafter_matches_target_greedy():
+    """Drafting with the target's own weights reproduces the target's
+    greedy continuation exactly — the acceptance-rate-1.0 harness that
+    proves the proposal plumbing (prefill + decode + positions) is
+    lossless."""
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, 41)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = [3, 1, 4, 1, 5]
+    eng = ServeEngine(params, cfg, batch_slots=1, cache_len=32)
+    req = eng.submit(prompt, max_new_tokens=5)
+    eng.run()
+    d = ModelDrafter(params, cfg, cache_len=64)
+    assert d.propose(prompt, 5) == req.output
+    # and an engine using it speculatively accepts every draft
+    spec = ServeEngine(params, cfg, batch_slots=1, cache_len=32,
+                       kv_layout="paged", block_size=4, spec_tokens=3,
+                       drafter=ModelDrafter(params, cfg, cache_len=64))
+    sreq = spec.submit(prompt, max_new_tokens=5)
+    spec.run()
+    assert sreq.output == req.output
+    assert spec.spec_metrics["acceptance_rate"] == 1.0
+
+
+def test_make_drafter_specs():
+    assert make_drafter(None).name == "ngram:3"
+    assert make_drafter("ngram").name == "ngram:3"
+    assert make_drafter("ngram:5").n == 5
+    inst = NGramDrafter(2)
+    assert make_drafter(inst) is inst
+    with pytest.raises(ValueError):
+        make_drafter("markov")
+
+
+def test_make_drafter_model_spec_uses_registry():
+    d = make_drafter("model:qwen3-1.7b")
+    assert isinstance(d, ModelDrafter) and d.name == "model:qwen3-1.7b"
+    assert d.propose([1, 2, 3], 4).__len__() == 4

@@ -250,6 +250,77 @@ def test_manager_cow_source_survives_eviction_pressure():
     m.check_invariants()
 
 
+def test_free_tokens_counts_only_reclaimable_chains():
+    """Regression: free_tokens used to count every tree block with
+    refcount 1 as reclaimable. But eviction frees chain *tails* only, so
+    an idle block whose chain continues into an in-use block can never be
+    evicted — the old estimate over-reported capacity, and a gateway
+    admitting by token budget would dispatch requests the pool cannot
+    actually serve (they bounce with PoolExhausted and livelock in
+    deferral until the pinning request retires)."""
+    m = KVCacheManager(6, BS)                   # 5 usable blocks
+    c1, c2 = list(range(4)), list(range(4, 8))
+    # B admits cold (tree empty): private blocks P,Q for chunks c1,c2
+    b = m.admit(c1 + c2, 8)
+    # A admits the first chunk alone — also cold, private block X
+    a = m.admit(c1, 4)
+    m.commit(c1, a.blocks)
+    m.release(a.blocks)                         # tree: [X], ref 1 (idle)
+    # B commits: chunk c1 dedups onto X, chunk c2 goes in as X's child Q
+    m.commit(c1 + c2, b.blocks)
+    # tree chain is now X(idle) -> Q(held by B): X can NOT be evicted
+    # until Q frees, so it is not reclaimable capacity
+    old_estimate = sum(1 for blk in m.radix.all_blocks()
+                       if m.pool.ref(blk) == 1)
+    assert old_estimate == 1                    # X looks idle...
+    assert m.radix.evictable_blocks() == 0      # ...but is pinned under Q
+    assert m.radix.evict(99) == 0               # eviction agrees: nothing
+    assert m.free_tokens() == m.pool.free_count() * BS
+    # the exact count is precisely admittable: filling it succeeds, one
+    # block more (which the old estimate promised) is refused
+    need = m.free_tokens()
+    filler = m.admit([100 + i for i in range(need)], need)
+    with pytest.raises(PoolExhausted):
+        m.admit([500], 1)
+    m.release(filler.blocks)
+    m.release(b.blocks)
+    m.check_invariants()
+
+
+# -------------------------------------------------------------- rollback
+
+def test_manager_rollback_counts_and_allows_private_pages():
+    """Speculative rejection: trimming tokens written beyond the commit
+    point is legal on request-private pages and only updates telemetry
+    (device-side the frontier rewind hides the rows)."""
+    m = KVCacheManager(16, BS)
+    adm = m.admit(list(range(6)), 16)           # 4 blocks, all private
+    m.commit(list(range(6)), adm.blocks)        # indexes 1 full chunk
+    trimmed = m.rollback(adm.blocks, 9, 14)     # rejects tokens 9..13
+    assert trimmed == adm.blocks[2:4]           # pages 2,3 hold stale rows
+    assert m.metrics.rollbacks == 1
+    assert m.metrics.tokens_rolled_back == 5
+    m.release(adm.blocks)
+    m.check_invariants()
+
+
+def test_manager_rollback_refuses_shared_pages():
+    """CoW safety: a rollback range overlapping a radix-indexed page means
+    unverified tokens were committed — another chain would attend garbage.
+    The manager must refuse loudly instead of corrupting the cache."""
+    m = KVCacheManager(16, BS)
+    adm = m.admit(list(range(8)), 12)
+    m.commit(list(range(8)), adm.blocks)        # chunks 0,1 now shared
+    with pytest.raises(ValueError):
+        m.rollback(adm.blocks, 5, 10)           # would trim shared page 1
+    with pytest.raises(ValueError):
+        m.rollback(adm.blocks, 9, 5)            # inverted range
+    # the legal version of the same trim (beyond the committed chunks)
+    assert m.rollback(adm.blocks, 8, 10) == [adm.blocks[2]]
+    m.release(adm.blocks)
+    m.check_invariants()
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 14)),
                 min_size=1, max_size=30))

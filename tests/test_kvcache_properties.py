@@ -1,0 +1,222 @@
+"""Stateful property tests for the paged KV-cache bookkeeping.
+
+Random interleavings of the full KVCacheManager lifecycle — admit /
+generate / commit / release / evict / **rollback** — against one shared
+model (`ManagerModel`) that tracks what every in-flight request holds.
+After every operation the model asserts the invariants the manager
+docstring promises:
+
+  * refcount conservation: every pool block's refcount equals exactly
+    (#held chains containing it) + (1 if the radix tree indexes it);
+  * no double free / no tree reference to a freed block (check_invariants);
+  * `free_tokens` exactness: `RadixTree.evictable_blocks` must equal what
+    `evict` can actually reclaim (the drain rule calls evict(inf) and
+    compares);
+  * rollback safety: trimming rejected speculative tokens never touches a
+    radix-shared page (the engine contract: the rollback floor is
+    max(committed, shared-prefix) tokens).
+
+Driven two ways: a hypothesis RuleBasedStateMachine when hypothesis is
+installed (CI), and a seeded random-walk fallback that exercises the same
+model so the logic also runs where hypothesis is absent.
+"""
+import random
+
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS
+
+from repro.kvcache import KVCacheManager, PoolExhausted
+
+BS = 4
+POOL = 17
+
+
+class _Req:
+    __slots__ = ("blocks", "tokens", "committed", "floor", "cap")
+
+    def __init__(self, blocks, tokens, n_shared_tokens):
+        self.blocks = blocks
+        self.tokens = tokens            # prompt + generated, written so far
+        self.committed = 0              # tokens indexed in the radix tree
+        # rollback floor: shared prefix pages belong to other chains
+        self.floor = n_shared_tokens
+        self.cap = len(blocks) * BS     # chain token capacity
+
+
+class ManagerModel:
+    """Single source of truth for both the hypothesis rules and the
+    seeded fallback walk: every op goes through here, every op ends in
+    check()."""
+
+    def __init__(self, n_blocks=POOL, bs=BS):
+        self.m = KVCacheManager(n_blocks, bs)
+        self.held = []
+
+    # ---------------------------------------------------------------- ops
+    def admit(self, fam: int, ln: int, extra: int):
+        prompt = [fam * 1000 + i for i in range(ln)]
+        try:
+            adm = self.m.admit(prompt, ln + extra)
+        except PoolExhausted:
+            self.check()
+            return None
+        if adm.cow is not None:
+            self.m.cow_done(adm.cow[0])
+        shared = len(adm.blocks) - len(adm.fresh)
+        req = _Req(adm.blocks, list(prompt), shared * BS)
+        self.held.append(req)
+        self.check()
+        return req
+
+    def generate(self, idx: int, n: int):
+        req = self.held[idx % len(self.held)]
+        n = min(n, req.cap - len(req.tokens))
+        base = 9_000 + len(req.tokens)
+        req.tokens += [base + i for i in range(n)]
+        self.check()
+
+    def commit(self, idx: int):
+        req = self.held[idx % len(self.held)]
+        self.m.commit(req.tokens, req.blocks)
+        n_full = min(len(req.tokens) // BS, len(req.blocks))
+        req.committed = n_full * BS
+        req.floor = max(req.floor, req.committed)
+        self.check()
+
+    def release(self, idx: int):
+        req = self.held.pop(idx % len(self.held))
+        self.m.release(req.blocks)
+        self.check()
+
+    def evict(self, n: int):
+        self.m.radix.evict(n)
+        self.check()
+
+    def rollback(self, idx: int, n_valid: int):
+        """Reject speculative tokens: trim the tail of what a request has
+        written back to n_valid (clamped to the engine-contract floor)."""
+        req = self.held[idx % len(self.held)]
+        n_valid = max(req.floor, min(n_valid, len(req.tokens)))
+        self.m.rollback(req.blocks, n_valid, len(req.tokens))
+        req.tokens = req.tokens[:n_valid]
+        self.check()
+
+    def drain(self):
+        """free_tokens must be exactly achievable: evicting everything
+        reclaims precisely what evictable_blocks predicted."""
+        predicted = self.m.radix.evictable_blocks()
+        freed = self.m.radix.evict(10 ** 9)
+        assert freed == predicted, (
+            f"evictable_blocks predicted {predicted}, evict freed {freed}")
+        self.check()
+
+    # ---------------------------------------------------------- invariant
+    def check(self):
+        self.m.check_invariants()
+        tree = set(self.m.radix.all_blocks())
+        counts = {}
+        for req in self.held:
+            for b in req.blocks:
+                counts[b] = counts.get(b, 0) + 1
+        for b in range(1, self.m.pool.n_blocks):
+            expect = counts.get(b, 0) + (1 if b in tree else 0)
+            assert self.m.pool.ref(b) == expect, (
+                f"block {b}: ref={self.m.pool.ref(b)}, "
+                f"held={counts.get(b, 0)}, in_tree={b in tree}")
+        assert self.m.free_tokens() == (
+            self.m.pool.free_count()
+            + self.m.radix.evictable_blocks()) * BS
+
+    def finish(self):
+        while self.held:
+            self.release(0)
+        self.drain()
+        assert self.m.pool.allocated_count() == 0
+
+
+# ------------------------------------------------------- seeded fallback
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8))
+def test_manager_random_walk_conserves_invariants(seed):
+    """Seeded random interleaving of the full op set — runs everywhere,
+    including environments without hypothesis."""
+    rng = random.Random(seed)
+    model = ManagerModel()
+    for _ in range(120):
+        op = rng.randrange(100)
+        if op < 35 or not model.held:
+            model.admit(rng.randrange(4), rng.randrange(1, 15),
+                        rng.randrange(0, 10))
+        elif op < 50:
+            model.generate(rng.randrange(8), rng.randrange(1, 12))
+        elif op < 65:
+            model.commit(rng.randrange(8))
+        elif op < 78:
+            model.rollback(rng.randrange(8), rng.randrange(0, 60))
+        elif op < 88:
+            model.release(rng.randrange(8))
+        elif op < 95:
+            model.evict(rng.randrange(1, 6))
+        else:
+            model.drain()
+    model.finish()
+
+
+# --------------------------------------------------- hypothesis stateful
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, precondition,
+                                     rule)
+
+    class ManagerMachine(RuleBasedStateMachine):
+        def __init__(self):
+            super().__init__()
+            self.model = ManagerModel()
+
+        @rule(fam=st.integers(0, 3), ln=st.integers(1, 14),
+              extra=st.integers(0, 9))
+        def admit(self, fam, ln, extra):
+            self.model.admit(fam, ln, extra)
+
+        @precondition(lambda self: self.model.held)
+        @rule(idx=st.integers(0, 7), n=st.integers(1, 11))
+        def generate(self, idx, n):
+            self.model.generate(idx, n)
+
+        @precondition(lambda self: self.model.held)
+        @rule(idx=st.integers(0, 7))
+        def commit(self, idx):
+            self.model.commit(idx)
+
+        @precondition(lambda self: self.model.held)
+        @rule(idx=st.integers(0, 7), n_valid=st.integers(0, 59))
+        def rollback(self, idx, n_valid):
+            self.model.rollback(idx, n_valid)
+
+        @precondition(lambda self: self.model.held)
+        @rule(idx=st.integers(0, 7))
+        def release(self, idx):
+            self.model.release(idx)
+
+        @rule(n=st.integers(1, 5))
+        def evict(self, n):
+            self.model.evict(n)
+
+        @rule()
+        def drain(self):
+            self.model.drain()
+
+        def teardown(self):
+            self.model.finish()
+
+    ManagerMachine.TestCase.settings = settings(
+        max_examples=60, stateful_step_count=40, deadline=None)
+    TestManagerStateful = pytest.mark.slow(ManagerMachine.TestCase)
+else:  # pragma: no cover - exercised only without hypothesis
+    @pytest.mark.slow
+    def test_manager_stateful_requires_hypothesis():
+        pytest.skip("hypothesis not installed; seeded fallback ran instead")

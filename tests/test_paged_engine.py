@@ -1,6 +1,11 @@
-"""Paged KV-cache engine: dense/paged decode equivalence, prefix-reuse
-accounting (shared blocks prefilled exactly once), copy-on-write safety,
-eviction under pool pressure, and bulk-prefill prompt-length bucketing."""
+"""Paged KV-cache engine behavior: prefix-reuse accounting (shared blocks
+prefilled exactly once), copy-on-write safety, eviction under pool
+pressure, bulk-prefill prompt-length bucketing, and the fused/speculative
+dispatch mechanics (EOS, hooks, rollback bookkeeping, layout guards).
+
+Output-equivalence across decode paths lives in test_decode_parity.py —
+the cross-path matrix replaced the per-path parity checks that used to
+accumulate here PR by PR."""
 import jax
 import numpy as np
 import pytest
@@ -41,14 +46,6 @@ def _outputs(eng, prompts, max_new=5, sampling=None):
 PROMPTS = [[3, 1, 4, 1, 5], [7, 8], [9, 10, 11, 12], [3, 1, 4, 2, 9]]
 
 
-@pytest.mark.parametrize("mode", ["decode", "bulk"])
-def test_paged_matches_dense_greedy(model, mode):
-    """Greedy batch decodes token-for-token identically on both layouts."""
-    dense = _outputs(_engine(model, kv="dense", mode=mode), PROMPTS)
-    paged = _outputs(_engine(model, kv="paged", mode=mode), PROMPTS)
-    assert paged == dense
-
-
 @pytest.mark.parametrize("scan,tail", [(False, ()), (True, ("attn",)),
                                        (False, ("attn",))])
 def test_paged_matches_dense_across_stacking(scan, tail):
@@ -65,15 +62,6 @@ def test_paged_matches_dense_across_stacking(scan, tail):
         eng.run()
         outs[kv] = [r.output for r in reqs]
     assert outs["paged"] == outs["dense"]
-
-
-def test_paged_matches_dense_sampled(model):
-    """Seeded sampling is layout-independent too (same logits in, same
-    PRNG stream out)."""
-    sp = SamplingParams(temperature=0.8, top_k=5, seed=11)
-    dense = _outputs(_engine(model, kv="dense"), PROMPTS[:2], sampling=sp)
-    paged = _outputs(_engine(model, kv="paged"), PROMPTS[:2], sampling=sp)
-    assert paged == dense
 
 
 def test_shared_prefix_prefilled_exactly_once(model):
@@ -157,30 +145,6 @@ def test_paged_requires_pure_attention():
 
 # ------------------------------------------------- decode kernel / fused
 
-def test_pallas_kernel_matches_dense(model):
-    """decode_kernel='pallas' (interpret mode on CPU) is token-identical to
-    the dense layout end-to-end — the savings are not bought with wrong
-    attention."""
-    dense = _outputs(_engine(model, kv="dense"), PROMPTS[:2], max_new=4)
-    paged = _outputs(_engine(model, decode_kernel="pallas"), PROMPTS[:2],
-                     max_new=4)
-    assert paged == dense
-
-
-def test_fused_decode_matches_single_step_greedy(model):
-    """The fused multi-token scan is pure dispatch hoisting: greedy outputs
-    (heterogeneous budgets included) are token-identical to single-step."""
-    single = _engine(model)
-    fused = _engine(model, fused_tokens=4)
-    reqs_s = [single.submit(p, max_new_tokens=3 + 2 * i)
-              for i, p in enumerate(PROMPTS)]
-    reqs_f = [fused.submit(p, max_new_tokens=3 + 2 * i)
-              for i, p in enumerate(PROMPTS)]
-    single.run()
-    fused.run()
-    assert [r.output for r in reqs_f] == [r.output for r in reqs_s]
-
-
 def test_fused_decode_respects_eos(model):
     """EOS is masked in-jit: pick an eos id actually generated mid-stream
     and check the fused engine stops exactly where single-step does."""
@@ -193,19 +157,6 @@ def test_fused_decode_respects_eos(model):
     single.run()
     fused.run()
     assert r_f.output == r_s.output and len(r_f.output) < len(probe)
-
-
-def test_fused_decode_mixed_sampler_falls_back(model):
-    """A batch with any sampled slot drops to single-token dispatch; the
-    outputs (greedy and seeded-sampled alike) still match the non-fused
-    engine."""
-    sp = SamplingParams(temperature=0.7, top_k=7, seed=3)
-    for eng in (plain := _engine(model), fus := _engine(model,
-                                                       fused_tokens=4)):
-        eng.submit(PROMPTS[0], max_new_tokens=6)                 # greedy
-        eng.submit(PROMPTS[1], max_new_tokens=6, sampling=sp)    # sampled
-    outs = {id(e): [r.output for r in e.run()] for e in (plain, fus)}
-    assert outs[id(fus)] == outs[id(plain)]
 
 
 def test_fused_streams_tokens_through_hooks(model):
@@ -226,6 +177,78 @@ def test_fused_requires_paged_layout(model):
         ServeEngine(params, cfg, kv_layout="dense", fused_tokens=4)
     with pytest.raises(ValueError):
         ServeEngine(params, cfg, kv_layout="dense", decode_kernel="pallas")
+    with pytest.raises(ValueError):
+        ServeEngine(params, cfg, kv_layout="dense", spec_tokens=4)
+
+
+# ---------------------------------------------------------- speculative
+
+def test_spec_decode_respects_eos(model):
+    """EOS inside an accepted draft burst stops emission exactly where
+    single-step does (EOS itself never emitted, slot retires)."""
+    probe = _outputs(_engine(model), [PROMPTS[0]], max_new=8)[0]
+    eos = probe[len(probe) // 2]
+    single = _engine(model)
+    spec = _engine(model, spec_tokens=4)
+    r_s = single.submit(PROMPTS[0], max_new_tokens=8, eos_id=eos)
+    r_p = spec.submit(PROMPTS[0], max_new_tokens=8, eos_id=eos)
+    single.run()
+    spec.run()
+    assert r_p.output == r_s.output and len(r_p.output) < len(probe)
+
+
+def test_spec_streams_tokens_through_hooks(model):
+    """on_token fires once per verified token, in acceptance-sized bursts."""
+    eng = _engine(model, spec_tokens=3)
+    seen = []
+    eng.on_token = lambda req, tok: seen.append((req.request_id, tok))
+    reqs = [eng.submit(p, max_new_tokens=5) for p in PROMPTS[:2]]
+    eng.run()
+    for r in reqs:
+        assert [t for i, t in seen if i == r.request_id] == r.output
+
+
+def test_spec_rollback_bookkeeping(model):
+    """Every rejected draft shows up in both the engine's spec counters
+    and the manager's rollback metrics, emitted tokens reconcile with the
+    outputs, and the pool survives with invariants intact."""
+    eng = _engine(model, spec_tokens=4)
+    reqs = [eng.submit(p, max_new_tokens=6) for p in PROMPTS]
+    eng.run()
+    sm = eng.spec_metrics
+    assert sm["dispatches"] == eng.spec_dispatches > 0
+    # each request's first token comes from prefill, the rest from spec
+    assert sm["tokens_emitted"] == sum(len(r.output) - 1 for r in reqs)
+    assert sm["tokens_rolled_back"] == \
+        eng.manager.metrics.tokens_rolled_back > 0
+    assert eng.manager.metrics.rollbacks > 0
+    assert 0.0 <= sm["acceptance_rate"] <= 1.0
+    eng.manager.check_invariants()
+
+
+def test_spec_rollback_chain_stays_reusable(model):
+    """After a speculative run retires (commit happens post-rollback), a
+    second request with the same prompt still gets a correct radix hit —
+    rolled-back rows never leak into the reusable prefix."""
+    prompt = [(i * 3 + 2) % V for i in range(8)]         # 2 full blocks
+    eng = _engine(model, batch_slots=1, spec_tokens=3)
+    out1 = _outputs(eng, [prompt], max_new=4)[0]
+    out2 = _outputs(eng, [prompt], max_new=4)[0]
+    assert out2 == out1
+    assert eng.cache_metrics.hits >= 1                   # prefix was reused
+    dense = _outputs(_engine(model, kv="dense", batch_slots=1),
+                     [prompt, prompt], max_new=4)
+    assert [out1, out2] == dense
+
+
+def test_spec_takes_precedence_over_fused(model):
+    """Both accelerators configured: greedy batches go through the
+    speculative path (spec counters advance), outputs still match."""
+    plain = _outputs(_engine(model), PROMPTS[:2], max_new=5)
+    eng = _engine(model, spec_tokens=3, fused_tokens=4)
+    outs = _outputs(eng, PROMPTS[:2], max_new=5)
+    assert outs == plain
+    assert eng.spec_dispatches > 0
 
 
 # ------------------------------------------------------------- bucketing

@@ -1,0 +1,123 @@
+"""Padding/bucketing edges of the bulk-prefill path: `bucket_len` at its
+boundaries and `prefill_into_cache` at degenerate prompt lengths (1, an
+exact power-of-two bucket boundary, and prompt == cache_len). These were
+only exercised indirectly through engine sweeps before; a wrong pad mask
+here silently corrupts the first decoded token."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve.engine import ServeEngine
+from repro.serve.step import bucket_len, prefill_into_cache
+
+V = 41
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, V)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+# ------------------------------------------------------------- bucket_len
+
+def test_bucket_len_boundaries():
+    # exact powers of two stay put (no pointless next-bucket padding)
+    assert [bucket_len(n, 64) for n in (1, 2, 4, 8, 16, 32, 64)] == \
+        [1, 2, 4, 8, 16, 32, 64]
+    # one past a boundary jumps a full bucket
+    assert [bucket_len(n, 64) for n in (3, 5, 9, 17, 33)] == \
+        [4, 8, 16, 32, 64]
+    # the cap binds exactly at cap, and never rounds a real length down
+    assert bucket_len(64, 64) == 64
+    assert bucket_len(65, 64) == 65
+    assert bucket_len(100, 64) == 100
+    # degenerate cap values
+    assert bucket_len(1, 1) == 1
+    assert bucket_len(5, 0) == 8                 # 0 = uncapped
+
+
+# ------------------------------------------------------ prefill_into_cache
+
+def _natural_caches(model, prompt, pad_to=None):
+    params, cfg = model
+    toks = list(prompt) + [0] * ((pad_to or len(prompt)) - len(prompt))
+    batch = {"tokens": jnp.asarray([toks], jnp.int32)}
+    _, caches = T.forward_prefill(params, cfg, batch)
+    return caches
+
+
+def _cache_pos(cache):
+    """The first stacked attention layer's pos leaf for batch row 0: (Sc,)."""
+    return np.asarray(cache["blocks"][0]["pos"][0, 0])
+
+
+def test_prefill_into_cache_masks_padding(model):
+    """Padded positions must land as pos = -1 (masked for decode); real
+    positions keep their absolute index."""
+    _, cfg = model
+    Sc = 16
+    caches = _natural_caches(model, [5, 7, 9], pad_to=8)     # 5 pad cols
+    cache = T.init_cache(cfg, 1, Sc)
+    out = prefill_into_cache(cfg, caches, cache, jnp.asarray([3]))
+    pos = _cache_pos(out)
+    assert list(pos[:3]) == [0, 1, 2]
+    assert (pos[3:] == -1).all()
+
+
+@pytest.mark.parametrize("plen", [1, 8, 16])
+def test_prefill_into_cache_boundary_lengths(model, plen):
+    """Length 1, exactly at a bucket boundary (8), and exactly == cache_len
+    (16): every slot holds its own position, nothing is dropped or
+    wrapped."""
+    _, cfg = model
+    Sc = 16
+    prompt = [(3 * i + 1) % V for i in range(plen)]
+    caches = _natural_caches(model, prompt)
+    cache = T.init_cache(cfg, 1, Sc)
+    out = prefill_into_cache(cfg, caches, cache, jnp.asarray([plen]))
+    pos = _cache_pos(out)
+    assert sorted(p for p in pos if p >= 0) == list(range(plen))
+    # prompt == cache_len fills every slot (ring takes the last Sc entries)
+    if plen == Sc:
+        assert (pos >= 0).all()
+
+
+@pytest.mark.parametrize("plen", [1, 8])
+def test_bulk_prefill_edge_lengths_match_decode_mode(model, plen):
+    """End to end: bulk (bucketed, padded) prefill at the edge lengths
+    produces the same tokens as feeding the prompt through decode steps."""
+    params, cfg = model
+    prompt = [(3 * i + 1) % V for i in range(plen)]
+    outs = {}
+    for mode in ("bulk", "decode"):
+        eng = ServeEngine(params, cfg, batch_slots=1, cache_len=32,
+                          prefill_mode=mode)
+        req = eng.submit(prompt, max_new_tokens=4)
+        eng.run()
+        outs[mode] = req.output
+    assert outs["bulk"] == outs["decode"]
+
+
+def test_bulk_prefill_prompt_fills_whole_table_paged(model):
+    """Paged bulk prefill with a prompt + budget that exactly fills the
+    slot's table: the request completes and the last page's final row is
+    used (off-by-one here truncates the output or scatters into a
+    neighbor page)."""
+    params, cfg = model
+    cache_len, bs = 16, 4
+    prompt = [(5 * i + 2) % V for i in range(12)]
+    eng = ServeEngine(params, cfg, batch_slots=1, cache_len=cache_len,
+                      kv_layout="paged", block_size=bs, prefill_mode="bulk")
+    req = eng.submit(prompt, max_new_tokens=4)           # 12 + 4 == 16
+    eng.run()
+    assert len(req.output) == 4 and req.error is None
+    dense = ServeEngine(params, cfg, batch_slots=1, cache_len=cache_len,
+                        prefill_mode="bulk")
+    dreq = dense.submit(prompt, max_new_tokens=4)
+    dense.run()
+    assert req.output == dreq.output
