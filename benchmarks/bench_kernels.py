@@ -58,8 +58,11 @@ def _bench_paged_rows(smoke):
     out, json_rows = [], []
     for nb in chains:
         q, kpool, vpool, table, pos = _paged_case(nb, bs)
-        ref = lambda *a: paged_attention(*a, kernel="reference")
-        ker = lambda *a: paged_attention(*a, kernel="pallas", interpret=True)
+        def ref(*a):
+            return paged_attention(*a, kernel="reference")
+
+        def ker(*a):
+            return paged_attention(*a, kernel="pallas", interpret=True)
         t_ref = _timeit(ref, q, kpool, vpool, table, pos)
         t_ker = _timeit(ker, q, kpool, vpool, table, pos)
         out.append((f"paged_attn_gather_ref_{nb * bs}tok", t_ref * 1e6,

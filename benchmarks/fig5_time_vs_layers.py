@@ -11,7 +11,7 @@ import os
 import tempfile
 
 from repro.core import ResultStore, Session, TaskQueue, Worker
-from repro.core.reporting import linear_fit, time_vs_layers
+from repro.core.reporting import linear_fit
 from repro.core.sweep import SearchSpace
 from repro.data import pipeline, synthetic
 

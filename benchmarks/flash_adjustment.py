@@ -19,7 +19,6 @@ os.environ.setdefault("XLA_FLAGS",
 import argparse
 import json
 
-import jax  # noqa: E402
 
 
 def measure(arch: str, shape_name: str) -> dict:

@@ -27,6 +27,7 @@ MODULES = [
     ("kvcache", "benchmarks.bench_kvcache"),
     ("kernels", "benchmarks.bench_kernels"),
     ("specdec", "benchmarks.bench_specdec"),
+    ("scheduler", "benchmarks.bench_scheduler"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -15,8 +15,6 @@ from __future__ import annotations
 import os
 import tempfile
 
-import numpy as np
-
 from repro.core import ResultStore, Session, TaskQueue, plan_sweep, train_population
 from repro.core.reporting import accuracy_vs_capacity, critical_mass
 from repro.core.sweep import SearchSpace

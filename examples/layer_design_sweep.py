@@ -8,7 +8,6 @@ and queue planes, reproducing the paper's three findings:
 
     PYTHONPATH=src python examples/layer_design_sweep.py [--n-tasks 240]
 """
-import argparse
 import sys
 
 sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--n-tasks", "240",

@@ -9,7 +9,7 @@ MongoDB document, made typed.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
@@ -156,7 +156,6 @@ class ModelConfig:
         mlp = (3 if self.mlp_gated else 2) * d * ff
         if self.moe:
             mlp = self.moe.n_experts * 3 * d * self.moe.expert_d_ff + d * self.moe.n_experts
-        per_layer = {}
         total = 0
         for t in self.layer_types():
             if t == "attn":

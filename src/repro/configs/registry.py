@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.configs.base import MLPConfig, ModelConfig, MoEConfig, SSMConfig
+from repro.configs.base import ModelConfig
 
 from repro.configs.granite_moe_3b_a800m import CONFIG as _granite3b
 from repro.configs.mistral_nemo_12b import CONFIG as _nemo
@@ -22,7 +22,8 @@ from repro.configs.pixtral_12b import CONFIG as _pixtral
 from repro.configs.qwen3_4b import CONFIG as _qwen4b
 from repro.configs.granite_moe_1b_a400m import CONFIG as _granite1b
 from repro.configs.qwen3_1_7b import CONFIG as _qwen17b
-from repro.configs.paper_mlp import CONFIG as PAPER_MLP
+# re-exported: the paper-MLP config is public registry surface
+from repro.configs.paper_mlp import CONFIG as PAPER_MLP  # noqa: F401
 
 REGISTRY: Dict[str, ModelConfig] = {c.arch_id: c for c in [
     _granite3b, _nemo, _rgemma, _mamba2, _starcoder2, _seamless, _pixtral,

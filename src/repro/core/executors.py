@@ -17,7 +17,7 @@ from repro.configs.base import MLPConfig
 from repro.core.worker import register_executor
 from repro.data import pipeline, synthetic, tokens
 from repro.models.dnn import dnn_loss, forward_dnn, init_dnn
-from repro.optim import adamw, sgd, schedules
+from repro.optim import adamw, sgd
 from repro.train.step import build_dnn_train_step
 
 

@@ -8,7 +8,6 @@ F1 and the activation comparison behind F3. ASCII scatter plots keep the
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -132,18 +131,33 @@ def spec_summary_table(spec: Dict[str, float]) -> str:
     return _metric_table(spec, ("speculation metric", "value"))
 
 
+def scheduler_summary_table(sched: Dict[str, float]) -> str:
+    """Markdown table of the chunked-prefill scheduler counters
+    (`ServeEngine.scheduler_metrics`, aggregated across replicas by
+    `Gateway.scheduler_summary`). tokens_per_chunk close to chunk_budget
+    means the budget is the binding constraint (long prompts saturating
+    each mixed step); prefills_in_flight > 0 at the end of a run means
+    work was evicted or abandoned mid-prefill."""
+    return _metric_table(sched, ("scheduler metric", "value"))
+
+
 def gateway_dashboard(summary: Dict[str, float],
                       gauges: Sequence[Tuple[float, int, int]],
                       kvcache: Optional[Dict[str, float]] = None,
-                      spec: Optional[Dict[str, float]] = None) -> str:
+                      spec: Optional[Dict[str, float]] = None,
+                      scheduler: Optional[Dict[str, float]] = None) -> str:
     """Full text dashboard: summary table + queue-depth-over-time (Fig 6
     shape) + slot-occupancy-over-time (Fig 7 shape, worker status) +
-    optional paged KV-cache and speculative-decoding counters."""
+    optional paged KV-cache, speculative-decoding, and chunked-prefill
+    scheduler counters."""
     parts = ["## gateway summary", gateway_summary_table(summary)]
     if kvcache:
         parts += ["\n## kv cache (paged)", kvcache_summary_table(kvcache)]
     if spec:
         parts += ["\n## speculative decode", spec_summary_table(spec)]
+    if scheduler:
+        parts += ["\n## chunked-prefill scheduler",
+                  scheduler_summary_table(scheduler)]
     depth = gauge_series(gauges, 1)
     if depth:
         parts += ["\n## queue depth (Fig 6)",

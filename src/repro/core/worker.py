@@ -23,7 +23,6 @@ import jax
 
 from repro.core.queue import TaskQueue
 from repro.core.results import ResultStore
-from repro.core.tasks import TaskSpec
 
 ExecutorFn = Callable[[Dict[str, Any], Dict[str, Any]], Dict[str, Any]]
 

@@ -8,7 +8,7 @@ shard of the global batch (data-parallel input pipeline).
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -237,6 +237,7 @@ class Gateway:
               pool_blocks: Optional[int] = None,
               decode_kernel: str = "reference", fused_tokens: int = 1,
               spec_tokens: int = 0, drafter=None,
+              scheduler: str = "phased", chunk_budget: int = 32,
               **kw) -> "Gateway":
         engines = [ServeEngine(params, cfg, batch_slots=batch_slots,
                                cache_len=cache_len, window=window,
@@ -244,7 +245,8 @@ class Gateway:
                                block_size=block_size, pool_blocks=pool_blocks,
                                decode_kernel=decode_kernel,
                                fused_tokens=fused_tokens,
-                               spec_tokens=spec_tokens, drafter=drafter)
+                               spec_tokens=spec_tokens, drafter=drafter,
+                               scheduler=scheduler, chunk_budget=chunk_budget)
                    for _ in range(replicas)]
         return cls(engines, **kw)
 
@@ -550,6 +552,27 @@ class Gateway:
         for m in ms[1:]:
             agg = agg.merge(m)
         return agg.as_dict()
+
+    def scheduler_summary(self) -> Optional[dict]:
+        """Aggregated chunked-prefill scheduler counters over every
+        replica running with scheduler="chunked" (None when the fleet is
+        all-phased): chunks and prefill tokens dispatched, prefills in
+        flight, realized tokens-per-chunk — the dashboard's scheduler
+        section renders this."""
+        ms = [r.engine.scheduler_metrics for r in self.replicas
+              if r.engine.scheduler_metrics is not None]
+        if not ms:
+            return None
+        # sum every integer counter the scheduler reports (so a new
+        # counter in ChunkedScheduler.metrics() aggregates automatically);
+        # identity fields pass through, the one ratio is recomputed
+        agg = {k: (sum(m[k] for m in ms) if isinstance(v, int) else v)
+               for k, v in ms[0].items()}
+        agg["chunk_budget"] = ms[0]["chunk_budget"]
+        agg["tokens_per_chunk"] = (agg["prefill_tokens_chunked"]
+                                   / agg["chunks_dispatched"]
+                                   if agg["chunks_dispatched"] else 0.0)
+        return agg
 
     def spec_summary(self) -> Optional[dict]:
         """Aggregated speculative-decoding counters over every replica

@@ -62,6 +62,25 @@ class RequestMetrics:
     def inter_token_latencies(self) -> List[float]:
         return [b - a for a, b in zip(self.token_ts, self.token_ts[1:])]
 
+    # per-request ITL distribution: the gaps THIS caller experienced
+    # between consecutive streamed tokens. itl_max is the request's worst
+    # stall — the number a chunked-prefill scheduler exists to bound
+    # (a peer's monolithic prompt prefill lands here on the phased path).
+    @property
+    def itl_p50(self) -> Optional[float]:
+        itls = self.inter_token_latencies
+        return percentile(itls, 50) if itls else None
+
+    @property
+    def itl_p95(self) -> Optional[float]:
+        itls = self.inter_token_latencies
+        return percentile(itls, 95) if itls else None
+
+    @property
+    def itl_max(self) -> Optional[float]:
+        itls = self.inter_token_latencies
+        return max(itls) if itls else None
+
     @property
     def tokens_per_sec(self) -> Optional[float]:
         if self.finish_t is None or self.first_token_t is None:
@@ -147,6 +166,11 @@ class GatewayMetrics:
         done = [m for m in self.requests.values() if m.status == "done"]
         ttfts = [m.ttft for m in done if m.ttft is not None]
         itls = [lat for m in done for lat in m.inter_token_latencies]
+        # per-request worst stall, then percentiles ACROSS requests: the
+        # pooled itl percentiles above dilute a rare long stall with every
+        # fast gap in the run, while stall_p95 answers "how bad does the
+        # worst pause get for a typical unlucky request"
+        stalls = [m.itl_max for m in done if m.itl_max is not None]
         total_tokens = sum(m.n_tokens for m in done)
         t_end = max((m.finish_t for m in done), default=now())
         duration = (t_end - self._t0) if self._t0 is not None else 0.0
@@ -168,7 +192,13 @@ class GatewayMetrics:
             "ttft_p90_ms": percentile(ttfts, 90) * 1e3,
             "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
             "itl_p50_ms": percentile(itls, 50) * 1e3,
+            "itl_p95_ms": percentile(itls, 95) * 1e3,
             "itl_p99_ms": percentile(itls, 99) * 1e3,
+            "itl_max_ms": (max(itls) * 1e3 if itls else float("nan")),
+            "stall_p50_ms": percentile(stalls, 50) * 1e3,
+            "stall_p95_ms": percentile(stalls, 95) * 1e3,
+            "stall_max_ms": (max(stalls) * 1e3 if stalls
+                             else float("nan")),
             "mean_queue_depth": float(np.mean(depths)) if depths else 0.0,
             "mean_slot_utilization": float(np.mean(util)) if util else 0.0,
         }

@@ -38,8 +38,10 @@ def shard_model(cfg, mesh, params, opt_state):
     p_specs = R.param_specs(cfg, p_shapes, mesh)
     o_shapes = jax.eval_shape(lambda s: s, opt_state)
     o_specs = R.opt_state_specs(cfg, o_shapes, p_specs)
-    to = lambda tree, specs: jax.tree.map(
-        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)
+    def to(tree, specs):
+        return jax.tree.map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+            tree, specs)
     return to(params, p_specs), to(opt_state, o_specs), p_specs, o_specs
 
 

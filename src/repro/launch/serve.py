@@ -52,6 +52,16 @@ def main():
                     help="draft proposer for --spec-tokens: 'ngram[:n]' "
                     "(self-speculative prompt lookup) or 'model:<arch_id>' "
                     "(small draft LM from the config registry)")
+    ap.add_argument("--scheduler", default="phased",
+                    choices=("phased", "chunked"),
+                    help="prefill interleaving: 'phased' = whole-prompt "
+                    "prefill on admission (decode stalls for the prompt "
+                    "length); 'chunked' = token-budget scheduler slicing "
+                    "prefill into bounded chunks that ride along decode "
+                    "dispatches (paged layout only)")
+    ap.add_argument("--chunk-budget", type=int, default=32,
+                    help="prefill tokens per mixed step for "
+                    "--scheduler chunked (the per-step stall bound)")
     ap.add_argument("--admit-budget", type=int, default=None,
                     help="admission control by token budget: total "
                     "prompt+max_new tokens the fleet may have committed at "
@@ -83,6 +93,8 @@ def main():
                        decode_kernel=args.decode_kernel,
                        fused_tokens=args.fused_tokens,
                        spec_tokens=args.spec_tokens, drafter=args.drafter,
+                       scheduler=args.scheduler,
+                       chunk_budget=args.chunk_budget,
                        admit_budget=args.admit_budget)
     prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
                for i in range(args.requests)]
@@ -122,9 +134,15 @@ def main():
               f"acceptance={spec['acceptance_rate']:.2f} "
               f"tok/dispatch={spec['tokens_per_dispatch']:.2f} "
               f"rolled_back={spec['tokens_rolled_back']}")
+    sched = gw.scheduler_summary()
+    if sched is not None:
+        print(f"[serve] scheduler=chunked budget={sched['chunk_budget']} "
+              f"chunks={sched['chunks_dispatched']} "
+              f"tok/chunk={sched['tokens_per_chunk']:.1f} "
+              f"stall p95={s['stall_p95_ms']:.1f}ms")
     if args.dashboard:
         print(reporting.gateway_dashboard(s, gw.metrics.gauges, kvcache=kv,
-                                          spec=spec))
+                                          spec=spec, scheduler=sched))
 
 
 if __name__ == "__main__":

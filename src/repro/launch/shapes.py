@@ -15,7 +15,6 @@ Shape semantics (DESIGN.md §5):
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Optional
 

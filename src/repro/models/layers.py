@@ -357,6 +357,140 @@ def attention_prefill_paged(params, cfg, x, q_pos, n_tok, kpool, vpool,
     return out.reshape(B, S, nh * hd) @ params["wo"], kpool, vpool
 
 
+def attention_mixed_paged(params, cfg, x, pos, n_chunk, kpool, vpool, table,
+                          ctable, *, window=None, rope=True,
+                          kernel="reference"):
+    """Mixed decode+chunk attention over a paged cache in ONE pass — the
+    per-layer unit of the chunked-prefill scheduler's mixed step.
+
+    x: (1, B + C, d) — the first B rows are one decode token per slot
+    (B == table.shape[0]), the last C rows are one prompt's prefill chunk
+    (right-padded; `n_chunk` of them real). pos: (B + C,) absolute
+    positions of every row. All rows' K/V are projected and scattered in
+    ONE combined pool update (the pool copy a functional cache update
+    pays is per-program, so splitting decode and chunk into separate
+    updates doubles the dominant cost); then the two reads run from the
+    same updated pool:
+
+      * decode rows attend their own chains through `table`
+        (kernel-switched exactly like `attention_decode_paged`);
+      * chunk rows attend the chunk slot's chain through `ctable` —
+        truncated by the caller to the pages the chunk can causally see —
+        causal by absolute position against the resident prefix plus
+        themselves (same contract as `attention_prefill_chunk_paged`,
+        the chunk-only oracle).
+
+    The decode slots and the chunk slot never share a frontier page (CoW
+    guarantee), so scatter order between the row groups is irrelevant.
+    Pad chunk rows (index >= n_chunk) and masked decode slots (all-zero
+    table rows) scatter into the reserved null block 0. Returns
+    (out (1, B + C, d_attn_out), new_kpool, new_vpool).
+    """
+    R = x.shape[1]
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    bs = kpool.shape[1]
+    B = table.shape[0]
+    C = R - B
+    nbc = ctable.shape[0]
+    q = (x[0] @ params["wq"]).reshape(R, nh, hd)
+    k = (x[0] @ params["wk"]).reshape(R, nkv, hd)
+    v = (x[0] @ params["wv"]).reshape(R, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    # one combined scatter: decode rows land in their slots' frontier
+    # pages, chunk rows in the chunk chain at their absolute offsets
+    dec_blk = jnp.take_along_axis(table, (pos[:B] // bs)[:, None],
+                                  axis=1)[:, 0]
+    cpos = pos[B:]
+    real = (jnp.arange(C) < n_chunk) & (cpos < nbc * bs)
+    chk_blk = jnp.where(real,
+                        jnp.take(ctable, jnp.clip(cpos // bs, 0, nbc - 1)),
+                        0)
+    blk = jnp.concatenate([dec_blk, chk_blk])
+    off = jnp.concatenate([pos[:B] % bs, jnp.where(real, cpos % bs, 0)])
+    kpool = kpool.at[blk, off].set(k)
+    vpool = vpool.at[blk, off].set(v)
+    # read 1: per-slot decode attention (kernel-switched, as decode_paged)
+    from repro.kernels.paged_attention import ops as pa_ops
+    out_dec = pa_ops.paged_attention(q[:B], kpool, vpool, table, pos[:B],
+                                     window=window, kernel=kernel)
+    # read 2: the chunk attends its truncated chain, causal by position
+    kall = jnp.take(kpool, ctable, axis=0).reshape(1, nbc * bs, nkv, hd)
+    vall = jnp.take(vpool, ctable, axis=0).reshape(1, nbc * bs, nkv, hd)
+    kv_pos = jnp.arange(nbc * bs)
+    mask = kv_pos[None, :] <= cpos[:, None]
+    if window is not None:
+        mask &= kv_pos[None, :] > (cpos[:, None] - window)
+    mask &= jnp.repeat(ctable != 0, bs)[None, :]
+    out_chk = _sdpa_xla(q[B:][None], kall, vall, mask[None],
+                        1.0 / math.sqrt(hd))[0]
+    out = jnp.concatenate([out_dec.reshape(B, nh * hd),
+                           out_chk.reshape(C, nh * hd)])
+    return (out @ params["wo"])[None], kpool, vpool
+
+
+def attention_prefill_chunk_paged(params, cfg, x, start, n_tok, kpool, vpool,
+                                  table, *, window=None, rope=True):
+    """One bounded *chunk* of a prompt's prefill over a paged cache — the
+    unit of work the chunked-prefill scheduler slices per engine step.
+    This standalone form is the chunk half's ORACLE: the production mixed
+    step fuses it with the lockstep decode into one pool update
+    (`attention_mixed_paged`); tests pin the two paths against each other.
+
+    Unlike `attention_prefill_paged` (which runs a prompt's whole uncached
+    suffix in one variable-bucket forward), the chunk has a FIXED shape
+    S = x.shape[1] == chunk_budget, so one jit trace serves every chunk of
+    every prompt: the first `n_tok` positions are real tokens at absolute
+    positions start..start+n_tok-1, the rest right-pad. The chunk's K/V
+    are scattered into the slot's block table at their absolute offsets,
+    and the chunk attends causally against everything already committed
+    below `start` (earlier chunks + reused radix prefix) plus itself.
+
+    x: (1, S, d); start/n_tok: scalars; table: (nb,) this slot's block
+    ids. Pad positions (and any position beyond the table span, which can
+    happen only through padding past the last chunk) scatter into the
+    reserved null block 0; their outputs are garbage the caller ignores.
+    Returns (out (1, S, d), new_kpool, new_vpool).
+    """
+    B, S, d = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    bs = kpool.shape[1]
+    nb = table.shape[0]
+    q = (x @ params["wq"]).reshape(B, S, nh, hd)
+    k = (x @ params["wk"]).reshape(B, S, nkv, hd)
+    v = (x @ params["wv"]).reshape(B, S, nkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    q_pos = start + jnp.arange(S)
+    if rope:
+        q = apply_rope(q, q_pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, q_pos[None, :], cfg.rope_theta)
+    real = (jnp.arange(S) < n_tok) & (q_pos < nb * bs)
+    page = jnp.clip(q_pos // bs, 0, nb - 1)
+    blk = jnp.where(real, jnp.take(table, page, axis=0), 0)
+    off = jnp.where(real, q_pos % bs, 0)
+    kpool = kpool.at[blk, off].set(k[0])
+    vpool = vpool.at[blk, off].set(v[0])
+    kall = jnp.take(kpool, table, axis=0).reshape(1, nb * bs, nkv, hd)
+    vall = jnp.take(vpool, table, axis=0).reshape(1, nb * bs, nkv, hd)
+    kv_pos = jnp.arange(nb * bs)
+    mask = kv_pos[None, :] <= q_pos[:, None]             # causal, absolute
+    if window is not None:
+        mask &= kv_pos[None, :] > (q_pos[:, None] - window)
+    # the slot's own pages are trustworthy up to the chunk frontier, but a
+    # null table row must never contribute keys (fresh pages past the
+    # frontier are zero-filled and sit beyond the causal mask anyway)
+    mask &= jnp.repeat(table != 0, bs)[None, :]
+    scale = 1.0 / math.sqrt(hd)
+    out = _sdpa_xla(q, kall, vall, mask[None], scale)
+    return out.reshape(B, S, nh * hd) @ params["wo"], kpool, vpool
+
+
 # ----------------------------------------------------------------------------- mlp
 
 def init_mlp(key, d_model, d_ff, dtype, gated=True):

@@ -19,9 +19,6 @@ enc-dec models (the audio-frontend stub per the carve-out).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -599,6 +596,127 @@ def forward_prefill_paged(params, cfg, tokens, start, n_tok, cache, table,
     for i in range(len(cfg.tail_pattern)):
         x, nc = _layer_prefill_paged(params["tail"][i], cfg, x, q_pos, n_tok,
                                      cache["tail"][i], table, window)
+        new_tail.append(nc)
+    x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x), {"blocks": new_blocks,
+                                     "tail": tuple(new_tail)}
+
+
+def _layer_mixed_paged(lp, cfg, x, pos, n_chunk, pool, table, ctable,
+                       window, kernel):
+    h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
+    att, ck, cv = L.attention_mixed_paged(
+        lp["attn"], cfg, h, pos, n_chunk, pool["k"], pool["v"], table,
+        ctable, window=window, kernel=kernel)
+    x = x + att
+    h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
+    ff, _ = _ffn_apply(lp, cfg, h)
+    return x + ff, {"k": ck, "v": cv}
+
+
+def mixed_step_paged(params, cfg, tokens, pos, n_chunk, cache, table, ctable,
+                     window=None, kernel="reference"):
+    """One chunked-prefill scheduler iteration on device: a single stack
+    traversal over B decode rows + C chunk rows (`tokens` (B + C,), rows
+    laid out as in `layers.attention_mixed_paged`), with ONE combined
+    pool scatter per layer. Splitting decode and chunk into two programs
+    (or two sequential pool updates in one program) pays the functional
+    pool copy twice — the dominant per-dispatch cost — so the fusion is
+    what makes chunk piggybacking near-free next to a plain decode step.
+    Returns (logits (B + C, V), new_cache)."""
+    window = cfg.window if window is None else window
+    x = L.embed(params["embed"], tokens)[None].astype(cfg.activation_dtype)
+
+    def block_fn(h, xs):
+        bp, bpool = xs
+        new_pools = []
+        for i in range(len(cfg.block_pattern)):
+            h, np_ = _layer_mixed_paged(bp[i], cfg, h, pos, n_chunk,
+                                        bpool[i], table, ctable, window,
+                                        kernel)
+            new_pools.append(np_)
+        return h, tuple(new_pools)
+
+    new_blocks = None
+    if cfg.n_blocks > 0 and "blocks" in params:
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        else:
+            ys = []
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["blocks"], cache["blocks"]))
+                x, y = block_fn(x, xs_i)
+                ys.append(y)
+            new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    new_tail = []
+    for i in range(len(cfg.tail_pattern)):
+        x, nc = _layer_mixed_paged(params["tail"][i], cfg, x, pos, n_chunk,
+                                   cache["tail"][i], table, ctable, window,
+                                   kernel)
+        new_tail.append(nc)
+    x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, x)[0], {"blocks": new_blocks,
+                                        "tail": tuple(new_tail)}
+
+
+def _layer_prefill_chunk_paged(lp, cfg, x, start, n_tok, pool, table, window):
+    h = L.apply_rms_norm(lp["norm1"], x, cfg.norm_eps)
+    att, ck, cv = L.attention_prefill_chunk_paged(
+        lp["attn"], cfg, h, start, n_tok, pool["k"], pool["v"], table,
+        window=window)
+    x = x + att
+    h = L.apply_rms_norm(lp["norm2"], x, cfg.norm_eps)
+    ff, _ = _ffn_apply(lp, cfg, h)
+    return x + ff, {"k": ck, "v": cv}
+
+
+def prefill_chunk_paged(params, cfg, tokens, start, n_tok, cache, table,
+                        window=None):
+    """One fixed-shape prefill *chunk* against a paged cache — the device
+    half of the chunked-prefill scheduler (`serve/scheduler.py`).
+
+    tokens: (1, C) — C == chunk_budget, a compile-time constant, so ONE
+    jit trace serves every chunk of every prompt regardless of how many
+    real tokens it carries; start: scalar absolute position of
+    tokens[0, 0]; n_tok: scalar count of real (non-pad) tokens; table:
+    (nb,) the slot's block chain. Positions [0, start) must already be
+    resident in the chain (earlier chunks and/or the reused radix
+    prefix). Returns (logits (1, C, V), new_cache) — only
+    logits[:, :n_tok] are meaningful; the caller reads position n_tok-1
+    when the chunk completes its prompt (the deferred first token).
+    """
+    window = cfg.window if window is None else window
+    x = L.embed(params["embed"], tokens).astype(cfg.activation_dtype)
+
+    def block_fn(h, xs):
+        bp, bpool = xs
+        new_pools = []
+        for i in range(len(cfg.block_pattern)):
+            h, np_ = _layer_prefill_chunk_paged(bp[i], cfg, h, start, n_tok,
+                                                bpool[i], table, window)
+            new_pools.append(np_)
+        return h, tuple(new_pools)
+
+    new_blocks = None
+    if cfg.n_blocks > 0 and "blocks" in params:
+        if cfg.scan_layers:
+            x, new_blocks = jax.lax.scan(block_fn, x,
+                                         (params["blocks"], cache["blocks"]))
+        else:
+            ys = []
+            for i in range(cfg.n_blocks):
+                xs_i = jax.tree.map(lambda a: a[i],
+                                    (params["blocks"], cache["blocks"]))
+                x, y = block_fn(x, xs_i)
+                ys.append(y)
+            new_blocks = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    new_tail = []
+    for i in range(len(cfg.tail_pattern)):
+        x, nc = _layer_prefill_chunk_paged(params["tail"][i], cfg, x, start,
+                                           n_tok, cache["tail"][i], table,
+                                           window)
         new_tail.append(nc)
     x = L.apply_rms_norm(params["final_norm"], x, cfg.norm_eps)
     return _logits(params, cfg, x), {"blocks": new_blocks,

@@ -35,7 +35,8 @@ def adamw(lr: Callable | float, *, b1=0.9, b2=0.95, eps=1e-8,
     lr_fn = lr if callable(lr) else (lambda _: lr)
 
     def init(params):
-        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def zeros(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return AdamWState(step=jnp.zeros((), jnp.int32),
                           mu=jax.tree.map(zeros, params),
                           nu=jax.tree.map(zeros, params))

@@ -72,48 +72,137 @@ class NGramDrafter:
 
 
 class ModelDrafter:
-    """Greedy draft proposals from a separate (typically much smaller)
-    LM. The draft model re-prefills the context each proposal — O(ctx)
-    per call, bucketed to bound retraces — then decodes k-1 more tokens
-    against a private dense cache. That is the correctness-first shape:
-    it keeps zero cross-step state, so target-side rollbacks can never
-    desynchronize it. (An incremental draft cache with its own rollback
-    is the named follow-up.)"""
+    """Greedy draft proposals from a separate (typically much smaller) LM.
+
+    Incremental KV (default): the drafter keeps a small pool of cached
+    context *streams* — (tokens fed, dense decode cache) pairs — and each
+    proposal continues the stream sharing the longest prefix with the new
+    context instead of re-prefilling the whole context. Between
+    speculation rounds a slot's context grows by only the accepted drafts
+    (which the stream already fed while proposing them) plus the bonus
+    token, so the typical replay tail is one or two tokens: O(k) decode
+    steps per round instead of an O(ctx) prefill forward. A target-side
+    rejection can never desynchronize the stream — stale positions beyond
+    the replay point are masked by the decode read (`cache_pos <= pos`)
+    and overwritten as the stream re-advances, the same invariant the
+    paged engine's rollback leans on. When no stream is close enough
+    (fresh request, or a pool evicted the match) the drafter falls back
+    to the bucketed bulk prefill, which is also the whole story with
+    ``incremental=False`` — the historical stateless shape.
+
+    `prefill_forwards` / `decode_forwards` / `tokens_fed` count the draft
+    model's work; `bench_specdec` records them to show the incremental
+    saving."""
 
     def __init__(self, params, cfg, *, cache_len: int = 1024,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None, incremental: bool = True,
+                 max_streams: int = 8):
         from repro.serve.step import (build_decode, build_prefill_bucketed,
                                       prefill_into_cache)
         self.params = params
         self.cfg = cfg
         self.cache_len = cache_len
         self.name = name or f"model:{cfg.arch_id}"
+        self.incremental = incremental
+        self.max_streams = max_streams
         self._prefill = jax.jit(build_prefill_bucketed(cfg))
         self._decode = jax.jit(build_decode(cfg))
         self._prefill_into_cache = prefill_into_cache
+        self._streams: List[dict] = []      # {"fed", "cache", "tick"}
+        self._tick = 0
+        # draft-model work counters (bench_specdec telemetry)
+        self.prefill_forwards = 0
+        self.decode_forwards = 0
+        self.tokens_fed = 0
 
+    # ------------------------------------------------------------- streams
+    def _best_stream(self, ctx: List[int]):
+        """Stream with the longest common prefix against `ctx` (ties keep
+        the first/oldest — deterministic)."""
+        best, best_l = None, 0
+        for st in self._streams:
+            n = 0
+            for a, b in zip(st["fed"], ctx):
+                if a != b:
+                    break
+                n += 1
+            if n > best_l:
+                best, best_l = st, n
+        return best, best_l
+
+    def _store_stream(self, st: Optional[dict], fed: List[int], cache):
+        self._tick += 1
+        if st is None:
+            st = {}
+            if len(self._streams) >= self.max_streams:
+                # evict the least-recently-used stream slot
+                st = min(self._streams, key=lambda s: s["tick"])
+            else:
+                self._streams.append(st)
+        st.update(fed=fed, cache=cache, tick=self._tick)
+
+    # ------------------------------------------------------------- propose
     def propose(self, ctx: Sequence[int], k: int) -> List[int]:
-        from repro.models import transformer as T
-        from repro.serve.step import bucket_len
         ctx = list(ctx)
         if not ctx or len(ctx) + k > self.cache_len:
             return list(ctx[-1:] or [0]) * k        # out of draft range
+        if self.incremental:
+            st, match = self._best_stream(ctx)
+            # continuing is a win while the replay tail stays shorter than
+            # a typical proposal round; past that, one bulk prefill
+            # forward beats len(ctx)-match single-token steps
+            if st is not None and len(ctx) - match <= max(2 * k + 2, 8):
+                return self._propose_incremental(st, ctx, match, k)
+        return self._propose_fresh(ctx, k)
+
+    def _propose_fresh(self, ctx: List[int], k: int) -> List[int]:
+        from repro.models import transformer as T
+        from repro.serve.step import bucket_len
         Sb = bucket_len(len(ctx), self.cache_len)
         toks = jnp.asarray([ctx + [0] * (Sb - len(ctx))], jnp.int32)
         first, nat = self._prefill(self.params, {"tokens": toks},
                                    jnp.asarray(len(ctx), jnp.int32))
+        self.prefill_forwards += 1
+        self.tokens_fed += len(ctx)
         out = [int(first[0])]
         cache = T.init_cache(self.cfg, 1, self.cache_len)
         cache = self._prefill_into_cache(self.cfg, nat, cache,
                                          jnp.asarray([len(ctx)]))
-        pos = len(ctx) - 1
+        out, cache = self._extend(cache, len(ctx) - 1, out, k)
+        if self.incremental:
+            self._store_stream(None, ctx + out[:k - 1], cache)
+        return out
+
+    def _propose_incremental(self, st: dict, ctx: List[int], match: int,
+                             k: int) -> List[int]:
+        """Continue a cached stream: replay only ctx[match:] (at least the
+        last context token, whose logits seed the first proposal), then
+        decode the remaining k-1 proposals as usual."""
+        cache = st["cache"]
+        start = min(match, len(ctx) - 1)
+        tok = None
+        for i in range(start, len(ctx)):
+            tok, cache = self._decode(
+                self.params, jnp.asarray([[ctx[i]]], jnp.int32),
+                jnp.asarray([i], jnp.int32), cache)
+            self.decode_forwards += 1
+            self.tokens_fed += 1
+        out = [int(tok[0])]
+        out, cache = self._extend(cache, len(ctx) - 1, out, k)
+        self._store_stream(st, ctx + out[:k - 1], cache)
+        return out
+
+    def _extend(self, cache, pos: int, out: List[int], k: int):
+        """Decode proposals out[1:] greedily, feeding each previous one."""
         while len(out) < k:
             pos += 1
             tok, cache = self._decode(
                 self.params, jnp.asarray([[out[-1]]], jnp.int32),
                 jnp.asarray([pos], jnp.int32), cache)
+            self.decode_forwards += 1
+            self.tokens_fed += 1
             out.append(int(tok[0]))
-        return out
+        return out, cache
 
 
 def make_drafter(spec, *, key=None) -> "Drafter":

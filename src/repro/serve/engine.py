@@ -53,6 +53,19 @@ Two paged-layout decode accelerators stack on top:
     slots drop the batch to single-token dispatch — and it takes
     precedence over `fused_tokens` when both are set. Acceptance-rate
     counters (`spec_metrics`) feed the gateway dashboard.
+  * `scheduler="chunked"` (chunk_budget=N) replaces the admit-then-bulk-
+    prefill admission ("phased", the default and oracle) with the token-
+    budget iteration scheduler (`serve/scheduler.py`): each step with a
+    partially-prefilled slot dispatches ONE fused mixed step — a lockstep
+    decode over every decoding slot plus up to N prompt tokens sliced
+    from an in-flight prefill (`serve.step.build_mixed_step`, one
+    combined pool scatter per layer) — so a long prompt's prefill rides
+    along instead of stalling every decode stream for the whole prompt
+    (the head-of-line-blocking latency cliff `bench_scheduler`
+    measures). First tokens are deferred to the completing chunk, and
+    prompts radix-commit at every chunk boundary so concurrent same-
+    prefix requests reuse pages mid-prefill. Scheduler counters
+    (`scheduler_metrics`) feed the gateway dashboard.
 """
 from __future__ import annotations
 
@@ -67,10 +80,11 @@ from repro.kvcache import KVCacheManager, PoolExhausted
 from repro.models import transformer as T
 from repro.serve.draft import make_drafter
 from repro.serve.sampler import GREEDY, Sampler, SamplingParams
+from repro.serve.scheduler import SCHEDULERS, ChunkedScheduler
 from repro.serve.step import (build_decode, build_decode_fused,
                               build_decode_paged, build_decode_spec,
-                              build_prefill_bucketed, build_prefill_paged,
-                              bucket_len)
+                              build_mixed_step, build_prefill_bucketed,
+                              build_prefill_paged, bucket_len)
 
 
 @dataclass
@@ -97,7 +111,8 @@ class ServeEngine:
                  prefill_mode: str = "decode", kv_layout: str = "dense",
                  block_size: int = 16, pool_blocks: Optional[int] = None,
                  decode_kernel: str = "reference", fused_tokens: int = 1,
-                 spec_tokens: int = 0, drafter=None):
+                 spec_tokens: int = 0, drafter=None,
+                 scheduler: str = "phased", chunk_budget: int = 32):
         """prefill_mode: "decode" feeds prompt tokens one at a time through
         decode_step (simple, exact); "bulk" runs the full-sequence prefill
         kernel once per request and copies the caches into the slot (one
@@ -126,7 +141,23 @@ class ServeEngine:
         the multi-token scan dispatch), and spec_tokens (>= 1 enables
         speculative draft-verify decode; `drafter` picks the proposer)
         accelerate the paged decode path — see the module docstring. All
-        require kv_layout="paged"."""
+        require kv_layout="paged".
+
+        scheduler picks the prefill/decode interleaving policy:
+          * "phased" — the historical default and oracle: an admitted
+            request's whole prompt is prefilled in one monolithic forward
+            before the batch decodes again (every decoding slot stalls
+            for the full prompt length).
+          * "chunked" — the token-budget iteration scheduler
+            (`serve/scheduler.py`): each step dispatches the lockstep
+            decode PLUS up to `chunk_budget` prefill tokens sliced from
+            an in-flight prompt in ONE jitted mixed step, so long-prompt
+            prefill rides along instead of preempting decode. The first
+            generated token is deferred to the chunk that completes the
+            prompt, and the prompt's full pages are radix-committed at
+            each chunk boundary (concurrent same-prefix admissions reuse
+            them mid-prefill). Requires kv_layout="paged"; outputs are
+            token-identical to "phased" by construction."""
         self.params = params
         self.cfg = cfg
         self.slots = batch_slots
@@ -138,6 +169,9 @@ class ServeEngine:
                              f"got {decode_kernel}")
         if spec_tokens < 0:
             raise ValueError(f"spec_tokens must be >= 0, got {spec_tokens}")
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
+                             f"got {scheduler!r}")
         if kv_layout != "paged":
             if decode_kernel != "reference":
                 raise ValueError("decode_kernel='pallas' targets the paged "
@@ -149,6 +183,10 @@ class ServeEngine:
                 raise ValueError("speculative decode verifies over (and "
                                  "rolls back) paged KV; use kv_layout="
                                  "'paged'")
+            if scheduler == "chunked":
+                raise ValueError("chunked prefill scatters bounded chunks "
+                                 "into paged block tables; use "
+                                 "kv_layout='paged'")
         self.kv_layout = kv_layout
         self.decode_kernel = decode_kernel
         self.fused_tokens = int(fused_tokens)
@@ -164,6 +202,9 @@ class ServeEngine:
         self.spec_tokens_rolled_back = 0
         self.block_size = block_size
         self.manager: Optional[KVCacheManager] = None
+        # chunked-prefill scheduler (None on the phased path)
+        self.scheduler: Optional[ChunkedScheduler] = None
+        self.scheduler_mode = scheduler
         if kv_layout == "paged":
             if (window if window is not None else cfg.window) is not None:
                 raise ValueError("paged KV cache does not support sliding-"
@@ -192,6 +233,13 @@ class ServeEngine:
             if self.spec_tokens > 0:
                 self._decode_spec = jax.jit(build_decode_spec(
                     cfg, self.spec_tokens, window=window))
+            if scheduler == "chunked":
+                self.scheduler = ChunkedScheduler(chunk_budget)
+                self._mixed_tok = jax.jit(build_mixed_step(
+                    cfg, window=window, kernel=decode_kernel))
+                self._mixed_lg = jax.jit(build_mixed_step(
+                    cfg, window=window, kernel=decode_kernel,
+                    return_logits=True))
         else:
             self.cache = T.init_cache(cfg, batch_slots, cache_len)
             self._decode_tok = jax.jit(build_decode(cfg, window=window))
@@ -327,7 +375,10 @@ class ServeEngine:
                         break       # retry after a running request retires
                 req = self._pending.pop(0)
                 self.active[slot] = req
-                self._prefill_slot(slot, req, adm)
+                if self.scheduler is not None:
+                    self._begin_chunked_prefill(slot, req, adm)
+                else:
+                    self._prefill_slot(slot, req, adm)
 
     def _emit(self, req: Request, tok: int):
         req.output.append(tok)
@@ -371,6 +422,13 @@ class ServeEngine:
             first = int(out[slot]) if greedy else \
                 self._sample_safe(req, np.asarray(out[slot]))
             self.prefill_tokens_computed += len(req.prompt)
+        self._finish_prefill(slot, req, first)
+
+    def _finish_prefill(self, slot: int, req: Request, first):
+        """Post-prefill bookkeeping shared by the phased and chunked paths:
+        emit the request's first generated token (or fail it request-scoped
+        on a sampling error), arm the decode budget, retire on EOS or an
+        exhausted budget."""
         self.pos[slot] = len(req.prompt) - 1
         if isinstance(first, Exception):        # request-scoped sampling bug
             self.budget[slot] = 0
@@ -383,21 +441,44 @@ class ServeEngine:
         if hit_eos or self.budget[slot] <= 0:
             self._retire(slot)
 
+    def _wire_slot_table(self, slot: int, adm):
+        """Point the slot's block-table row at the Admission's chain and
+        perform the device half of copy-on-write: a partially matching
+        page is cloned so our writes can't clobber the cached original
+        (`cow_done` drops the manager's pin only AFTER the device copy —
+        the ordering the manager's admission pinning relies on)."""
+        self._slot_blocks[slot] = list(adm.blocks)
+        self.table[slot, :] = 0
+        self.table[slot, :len(adm.blocks)] = adm.blocks
+        if adm.cow is not None:
+            src, dst = adm.cow
+            self.cache = T.copy_pool_blocks(self.cache, [src], [dst])
+            self.manager.cow_done(src)
+
+    def _begin_chunked_prefill(self, slot: int, req: Request, adm):
+        """Chunked-scheduler admission: wire the slot's block table from
+        the Admission (exactly like the phased paged path, CoW included)
+        but run NO model forward — the prompt's uncached tokens will be
+        sliced into bounded chunks by `_step_mixed`, riding along decode
+        dispatches. The first generated token is deferred to the chunk
+        that completes the prompt."""
+        self._wire_slot_table(slot, adm)
+        if not req.prompt:
+            # degenerate empty prompt: nothing to chunk; argmax of a zero
+            # logits row (token 0), matching the phased path
+            first = 0 if req.sampling.is_greedy else self._sample_safe(
+                req, np.zeros((self.cfg.vocab_size,), np.float32))
+            self._finish_prefill(slot, req, first)
+            return
+        self.scheduler.admit(slot, adm.n_reused)
+
     def _paged_prefill_slot(self, slot: int, req: Request, adm) -> int:
         """Prefix-reusing prefill: wire the slot's block table from the
         Admission (shared radix pages + CoW clone + fresh pages), then run
         only the uncached suffix through the model — one bulk forward or
         len(suffix) decode steps. Returns the first generated token."""
         greedy = req.sampling.is_greedy
-        self._slot_blocks[slot] = list(adm.blocks)
-        self.table[slot, :] = 0
-        self.table[slot, :len(adm.blocks)] = adm.blocks
-        if adm.cow is not None:
-            # partially matching page: clone it so our writes can't clobber
-            # the cached original (copy-on-write)
-            src, dst = adm.cow
-            self.cache = T.copy_pool_blocks(self.cache, [src], [dst])
-            self.manager.cow_done(src)
+        self._wire_slot_table(slot, adm)
         start, P = adm.n_reused, len(req.prompt)
         self.prefill_tokens_computed += P - start
         if not req.prompt:
@@ -490,6 +571,8 @@ class ServeEngine:
     def _retire(self, slot: int):
         req = self.active[slot]
         req.done = True
+        if self.scheduler is not None:
+            self.scheduler.drop(slot)    # no-op unless mid-prefill
         if self.kv_layout == "paged":
             self._release_slot_blocks(slot, req)
         self.active[slot] = None
@@ -504,8 +587,13 @@ class ServeEngine:
         """Admit + one lockstep decode over active slots. Returns #active.
         On a fused engine (fused_tokens > 1) an all-greedy batch advances
         up to fused_tokens positions in this one call; any slot needing
-        host-side sampling falls the batch back to single-token dispatch."""
+        host-side sampling falls the batch back to single-token dispatch.
+        On a chunked engine, any step with a partially-prefilled slot
+        dispatches the mixed decode+chunk step instead (the fused/spec
+        fast lanes resume once no prefill is in flight)."""
         self._admit()
+        if self.scheduler is not None and self.scheduler.has_prefill_work():
+            return self._step_mixed()
         live = [s for s in range(self.slots) if self.active[s] is not None]
         if not live:
             return 0
@@ -551,6 +639,84 @@ class ServeEngine:
             if hit_eos or self.budget[s] <= 0:
                 self._retire(s)
         return len(live)
+
+    def _step_mixed(self) -> int:
+        """One chunked-scheduler iteration: lockstep single-token decode
+        over every *decoding* slot plus ONE bounded prefill chunk for the
+        scheduler's head prefilling slot, dispatched together through
+        `build_mixed_step`. Decoding slots never wait out a monolithic
+        prompt forward — the stall per step is bounded by chunk_budget.
+
+        Reconciliation: decode slots advance exactly as in `step()`; the
+        chunk advances its slot's cursor, radix-commits the prompt's
+        newly completed pages (concurrent same-prefix admissions reuse
+        them mid-prefill), and — when it completes the prompt — samples
+        the deferred first token from the chunk's last-position logits
+        and flips the slot to decoding."""
+        sched = self.scheduler
+        plan = sched.plan_chunk(
+            {s: self.active[s].prompt for s in range(self.slots)
+             if self.active[s] is not None and sched.prefilling(s)})
+        decode_live = [s for s in range(self.slots)
+                       if self.active[s] is not None
+                       and not sched.prefilling(s)]
+        creq = self.active[plan.slot]
+        toks = np.zeros((self.slots, 1), np.int32)
+        for s in decode_live:
+            toks[s, 0] = self.active[s].output[-1]
+        pos = np.maximum(self.pos + 1, 0).astype(np.int32)
+        # prefilling (and empty) slots' table rows are masked to the null
+        # block: their lockstep decode writes must never touch live pages
+        tbl = np.zeros_like(self.table)
+        for s in decode_live:
+            tbl[s] = self.table[s]
+        ctoks = np.zeros((1, sched.chunk_budget), np.int32)
+        ctoks[0, :len(plan.tokens)] = plan.tokens
+        # the chunk can only attend pages up to its own end: pass a
+        # truncated table so the in-jit gather spans ceil(end/bs) pages —
+        # bucketed to powers of two, so retraces stay O(log nb) — instead
+        # of the whole cache span on every chunk (early chunks of a long
+        # prompt would otherwise pay full-table attention P/C times over)
+        nbp = -(-(plan.start + len(plan.tokens)) // self.block_size)
+        nbp = min(bucket_len(nbp, 0), self.table.shape[1])
+        greedy_batch = all(self.active[s].sampling.is_greedy
+                           for s in decode_live)
+        need_logits = (bool(decode_live) and not greedy_batch) or \
+            (plan.completes and not creq.sampling.is_greedy)
+        mixed = self._mixed_lg if need_logits else self._mixed_tok
+        out_d, out_c, self.cache = mixed(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+            jnp.asarray(tbl), jnp.asarray(ctoks),
+            jnp.asarray(plan.start, jnp.int32),
+            jnp.asarray(len(plan.tokens), jnp.int32),
+            jnp.asarray(self.table[plan.slot, :nbp]))
+        sched.mixed_dispatches += 1
+        out_d = np.asarray(out_d)
+        for s in decode_live:
+            req = self.active[s]
+            self.pos[s] += 1
+            self.budget[s] -= 1
+            tok = self._sample_safe(req, out_d[s]) if need_logits \
+                else int(out_d[s])
+            if isinstance(tok, Exception):
+                self.budget[s] = 0
+                self._retire(s)
+                continue
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if not hit_eos:
+                self._emit(req, tok)
+            if hit_eos or self.budget[s] <= 0:
+                self._retire(s)
+        # chunk reconciliation: cursor forward, commit at the boundary
+        sched.advance(plan)
+        self.prefill_tokens_computed += len(plan.tokens)
+        cur = plan.start + len(plan.tokens)
+        self.manager.commit(creq.prompt[:cur], self._slot_blocks[plan.slot])
+        if plan.completes:
+            first = self._sample_safe(creq, np.asarray(out_c)) \
+                if need_logits else int(out_c)
+            self._finish_prefill(plan.slot, creq, first)
+        return len(decode_live) + 1
 
     def _step_fused(self, live, toks, pos) -> int:
         """One fused dispatch: up to fused_tokens greedy decode steps in a
@@ -674,6 +840,15 @@ class ServeEngine:
                                     if self.spec_dispatches else 0.0),
         }
 
+    @property
+    def scheduler_metrics(self) -> Optional[dict]:
+        """Chunked-prefill scheduler counters (None on the phased path):
+        chunks/tokens dispatched, prefills started/completed/in-flight,
+        and realized tokens-per-chunk — the gateway dashboard's scheduler
+        section aggregates these across replicas."""
+        return self.scheduler.metrics() if self.scheduler is not None \
+            else None
+
     def run(self) -> List[Request]:
         """Drive to completion and return finished requests. Works even on
         an engine whose frontend disabled retain_finished (requests that
@@ -699,6 +874,9 @@ class ServeEngine:
             return True
         for slot in range(self.slots):
             if self.active[slot] is req:
+                if self.scheduler is not None:
+                    # half-prefilled: forget its cursor/queue position too
+                    self.scheduler.drop(slot)
                 if self.kv_layout == "paged":
                     # replica is being failed out: don't index its pages
                     # (state is suspect), just return the references
@@ -710,7 +888,6 @@ class ServeEngine:
 
 
 def _take_rows(o, n, slots, axis):
-    idx = [slice(None)] * o.ndim
     sel = np.zeros(o.shape[axis], bool)
     sel[list(slots)] = True
     reshape = [1] * o.ndim

@@ -6,8 +6,6 @@ long_500k (one new token against a seq_len-sized KV state).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -188,6 +186,58 @@ def build_decode_spec(cfg, k: int, *, window=None):
     return spec
 
 
+def build_mixed_step(cfg, *, window=None, kernel: str = "reference",
+                     return_logits: bool = False):
+    """One chunked-prefill scheduler iteration in ONE dispatch: a lockstep
+    single-token decode over every decoding slot PLUS one bounded prefill
+    chunk for a partially-prefilled slot. Prefill piggybacks on the decode
+    dispatch instead of preempting it — the decoding slots never wait out
+    a monolithic prompt forward.
+
+    The chunk operand has a FIXED length (the engine's chunk_budget):
+    every chunk is right-padded to that shape, so one jit trace serves all
+    chunk sizes (a short final chunk pays padding, never a retrace).
+
+    mixed(params, tokens, pos, cache, table, ctoks, cstart, cn, ctable)
+        -> (decode_out, chunk_out, cache)
+      tokens (B,1) / pos (B,) / table (B,nb): the decode operands, with
+        non-decoding slots' table rows zeroed (their lockstep writes land
+        in the reserved null page — the engine masks them host-side);
+      ctoks (1,chunk_len): the chunk's tokens (right-padded), cstart its
+        absolute start position, cn its real-token count, ctable the
+        prefilling slot's block chain TRUNCATED to the pages the chunk
+        can causally see (the engine buckets the page count to powers of
+        two — O(log nb) retraces — so an early chunk of a long prompt
+        attends a short span instead of the whole cache width).
+      decode_out: per-slot greedy token (B,) or last-position logits
+        (B,V); chunk_out: the chunk's last-real-position greedy token ()
+        or logits (V,) — meaningful only when the chunk completes its
+        prompt (the deferred first token).
+
+    Decode rows and chunk rows run as ONE fused stack traversal with one
+    combined pool scatter per layer (`transformer.mixed_step_paged`) —
+    the functional pool copy is the dominant per-dispatch cost, so a
+    two-program (or two-update) structure would pay it twice and the
+    chunk would stop being a near-free passenger. The two row groups
+    touch disjoint pages (a slot's frontier page is never shared — CoW
+    guarantee)."""
+    def mixed(params, tokens, pos, cache, table, ctoks, cstart, cn, ctable):
+        B = tokens.shape[0]
+        C = ctoks.shape[1]
+        all_toks = jnp.concatenate([tokens[:, 0], ctoks[0]])
+        all_pos = jnp.concatenate(
+            [pos, cstart + jnp.arange(C, dtype=pos.dtype)])
+        logits, cache = T.mixed_step_paged(params, cfg, all_toks, all_pos,
+                                           cn, cache, table, ctable,
+                                           window=window, kernel=kernel)
+        last = jnp.take(logits, B + cn - 1, axis=0)
+        if return_logits:
+            return logits[:B], last, cache
+        nxt = jnp.argmax(logits[:B], axis=-1).astype(jnp.int32)
+        return nxt, jnp.argmax(last, axis=-1).astype(jnp.int32), cache
+    return mixed
+
+
 def build_prefill_paged(cfg, *, window=None, return_logits: bool = False):
     """Suffix-only prefill on a prefix-cache hit: `tokens` (1, S_bucket) are
     the uncached prompt tail starting at absolute position `start`
@@ -237,7 +287,6 @@ def prefill_into_cache(cfg, caches, cache, prompt_lens):
         if "k" in dst:   # attention
             Sc = dst["k"].shape[1]
             Sp = src["k"].shape[1]
-            pos = src["pos"]                         # (B, Sp)
             take = min(Sc, Sp)
             # last `take` entries (ring semantics for window caches)
             ksrc, vsrc, psrc = (a[:, -take:] for a in

@@ -16,7 +16,6 @@ def softmax_xent(logits, labels, mask=None, label_smoothing: float = 0.0):
     partitions the same way. f32 throughout for stability."""
     logits = logits.astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
-    V = logits.shape[-1]
     vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
                                           logits.ndim - 1)
     ll = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0),

@@ -2,8 +2,7 @@
 accumulation (lax.scan over microbatches so HLO stays compact)."""
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

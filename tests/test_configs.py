@@ -1,6 +1,5 @@
 """Config sanity: analytic parameter counts land near the published model
 sizes; reduced variants stay in smoke budget; shape-case construction."""
-import jax
 import pytest
 
 from repro.configs import registry

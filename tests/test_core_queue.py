@@ -64,7 +64,7 @@ def test_journal_replay(tmp_path):
     for i in range(4):
         q.put(_spec(i))
     q.ack(q.get().task_id)           # t0 done
-    t = q.get()                       # t1 leased (lease is lost on crash)
+    q.get()                           # t1 leased (lease is lost on crash)
     q.close()
     q2 = TaskQueue(path)              # "crash" recovery
     remaining = set()

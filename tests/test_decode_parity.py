@@ -4,9 +4,10 @@ One seeded end-to-end sweep over every decode path x sampling mode,
 replacing the ad-hoc per-PR parity checks that used to live in
 test_paged_engine.py / bench_kvcache.py. Every acceleration layer this
 repo stacks (paged KV, Pallas decode kernel, fused multi-token dispatch,
-speculative draft-verify) claims to be a pure execution-strategy change:
+speculative draft-verify, chunked-prefill scheduling) claims to be a
+pure execution-strategy change:
 
-  * greedy requests must be TOKEN-IDENTICAL across all five paths;
+  * greedy requests must be TOKEN-IDENTICAL across all six paths;
   * seeded sampled requests must be identical too (same logits in, same
     host PRNG stream out) — on paths whose fast lane is greedy-only
     (fused, speculative) this exercises the single-token fallback.
@@ -36,6 +37,7 @@ PATHS = {
     "paged_pallas": dict(kv_layout="paged", decode_kernel="pallas"),
     "fused": dict(kv_layout="paged", fused_tokens=4),
     "speculative": dict(kv_layout="paged", spec_tokens=3, drafter="ngram"),
+    "chunked": dict(kv_layout="paged", scheduler="chunked", chunk_budget=3),
 }
 
 SAMPLERS = {

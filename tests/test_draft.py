@@ -62,6 +62,36 @@ def test_model_drafter_matches_target_greedy():
     assert spec.spec_metrics["acceptance_rate"] == 1.0
 
 
+def test_model_drafter_incremental_kv_matches_fresh():
+    """The incremental draft cache must change ONLY the work, never the
+    proposals: an engine speculating with it emits the same tokens as one
+    re-prefilling per proposal, while feeding far fewer tokens through
+    the draft model (and fewer prefill forwards)."""
+    cfg = ModelConfig("t", "dense", 2, 32, 2, 2, 64, 41)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    prompts = [[3, 1, 4, 1, 5], [9, 8, 7]]
+
+    def drive(drafter):
+        eng = ServeEngine(params, cfg, batch_slots=2, cache_len=64,
+                          kv_layout="paged", block_size=4, spec_tokens=3,
+                          drafter=drafter)
+        reqs = [eng.submit(p, max_new_tokens=12) for p in prompts]
+        eng.run()
+        return [r.output for r in reqs]
+
+    inc = ModelDrafter(params, cfg, cache_len=64)            # default: on
+    fresh = ModelDrafter(params, cfg, cache_len=64, incremental=False)
+    assert drive(inc) == drive(fresh)
+    assert inc.prefill_forwards < fresh.prefill_forwards
+    assert inc.tokens_fed < fresh.tokens_fed
+    # repeat proposals on an unchanged context replay one token, not ctx
+    before = inc.tokens_fed
+    a = inc.propose(prompts[0], 4)
+    b = inc.propose(prompts[0], 4)
+    assert a == b
+    assert inc.tokens_fed - before <= 2 * 4 + 2
+
+
 def test_make_drafter_specs():
     assert make_drafter(None).name == "ngram:3"
     assert make_drafter("ngram").name == "ngram:3"

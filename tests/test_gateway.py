@@ -344,7 +344,7 @@ def test_poison_request_fails_alone_replica_survives(model):
     def explode(logits):
         raise ValueError("NaN probs")
     poison.engine_req._sampler.sample = explode
-    done = gw.run()
+    gw.run()
     assert ok.done and not poison.done
     assert poison.status == "failed"
     assert isinstance(poison.error, ValueError)

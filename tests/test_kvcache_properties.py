@@ -1,7 +1,8 @@
 """Stateful property tests for the paged KV-cache bookkeeping.
 
-Random interleavings of the full KVCacheManager lifecycle — admit /
-generate / commit / release / evict / **rollback** — against one shared
+Random interleavings of the full KVCacheManager lifecycle — admit (phased
+or chunked) / **chunk_prefill** / generate / commit / release / evict /
+**rollback** — against one shared
 model (`ManagerModel`) that tracks what every in-flight request holds.
 After every operation the model asserts the invariants the manager
 docstring promises:
@@ -14,7 +15,11 @@ docstring promises:
     compares);
   * rollback safety: trimming rejected speculative tokens never touches a
     radix-shared page (the engine contract: the rollback floor is
-    max(committed, shared-prefix) tokens).
+    max(committed, shared-prefix) tokens);
+  * chunked-prefill safety: a request admitted with only its reused
+    prefix written advances in bounded chunks with a radix commit at
+    every chunk boundary, and releasing it half-prefilled (the engine's
+    eviction path) leaks nothing.
 
 Driven two ways: a hypothesis RuleBasedStateMachine when hypothesis is
 installed (CI), and a seeded random-walk fallback that exercises the same
@@ -33,15 +38,18 @@ POOL = 17
 
 
 class _Req:
-    __slots__ = ("blocks", "tokens", "committed", "floor", "cap")
+    __slots__ = ("blocks", "tokens", "committed", "floor", "cap", "prompt")
 
-    def __init__(self, blocks, tokens, n_shared_tokens):
+    def __init__(self, blocks, tokens, n_shared_tokens, prompt=None):
         self.blocks = blocks
         self.tokens = tokens            # prompt + generated, written so far
         self.committed = 0              # tokens indexed in the radix tree
         # rollback floor: shared prefix pages belong to other chains
         self.floor = n_shared_tokens
         self.cap = len(blocks) * BS     # chain token capacity
+        # full target prompt; chunked-prefill admits write toward it in
+        # bounded chunks (tokens starts at just the reused prefix)
+        self.prompt = prompt if prompt is not None else list(tokens)
 
 
 class ManagerModel:
@@ -54,7 +62,11 @@ class ManagerModel:
         self.held = []
 
     # ---------------------------------------------------------------- ops
-    def admit(self, fam: int, ln: int, extra: int):
+    def admit(self, fam: int, ln: int, extra: int, chunked: bool = False):
+        """Admit a request. `chunked` models the chunked-prefill
+        scheduler: only the reused prefix counts as written on admission
+        and `chunk_prefill` advances the rest in bounded chunks (the
+        phased path writes the whole prompt here)."""
         prompt = [fam * 1000 + i for i in range(ln)]
         try:
             adm = self.m.admit(prompt, ln + extra)
@@ -64,10 +76,26 @@ class ManagerModel:
         if adm.cow is not None:
             self.m.cow_done(adm.cow[0])
         shared = len(adm.blocks) - len(adm.fresh)
-        req = _Req(adm.blocks, list(prompt), shared * BS)
+        written = list(prompt[:adm.n_reused]) if chunked else list(prompt)
+        req = _Req(adm.blocks, written, shared * BS, prompt=prompt)
         self.held.append(req)
         self.check()
         return req
+
+    def chunk_prefill(self, idx: int, n: int):
+        """One scheduler chunk: write up to `n` further prompt tokens,
+        then radix-commit at the chunk boundary (full pages only) — the
+        engine's `_step_mixed` contract. Past the prompt this degrades to
+        a commit of whatever has been written (the retire-time shape)."""
+        req = self.held[idx % len(self.held)]
+        n = min(n, len(req.prompt) - len(req.tokens))
+        if n > 0:
+            req.tokens += req.prompt[len(req.tokens):len(req.tokens) + n]
+        self.m.commit(req.tokens, req.blocks)
+        n_full = min(len(req.tokens) // BS, len(req.blocks))
+        req.committed = n_full * BS
+        req.floor = max(req.floor, req.committed)
+        self.check()
 
     def generate(self, idx: int, n: int):
         req = self.held[idx % len(self.held)]
@@ -146,10 +174,12 @@ def test_manager_random_walk_conserves_invariants(seed):
     model = ManagerModel()
     for _ in range(120):
         op = rng.randrange(100)
-        if op < 35 or not model.held:
+        if op < 30 or not model.held:
             model.admit(rng.randrange(4), rng.randrange(1, 15),
-                        rng.randrange(0, 10))
-        elif op < 50:
+                        rng.randrange(0, 10), chunked=rng.random() < 0.5)
+        elif op < 45:
+            model.chunk_prefill(rng.randrange(8), rng.randrange(1, 9))
+        elif op < 55:
             model.generate(rng.randrange(8), rng.randrange(1, 12))
         elif op < 65:
             model.commit(rng.randrange(8))
@@ -178,9 +208,14 @@ if HAVE_HYPOTHESIS:
             self.model = ManagerModel()
 
         @rule(fam=st.integers(0, 3), ln=st.integers(1, 14),
-              extra=st.integers(0, 9))
-        def admit(self, fam, ln, extra):
-            self.model.admit(fam, ln, extra)
+              extra=st.integers(0, 9), chunked=st.booleans())
+        def admit(self, fam, ln, extra, chunked):
+            self.model.admit(fam, ln, extra, chunked=chunked)
+
+        @precondition(lambda self: self.model.held)
+        @rule(idx=st.integers(0, 7), n=st.integers(1, 8))
+        def chunk_prefill(self, idx, n):
+            self.model.chunk_prefill(idx, n)
 
         @precondition(lambda self: self.model.held)
         @rule(idx=st.integers(0, 7), n=st.integers(1, 11))

@@ -7,13 +7,11 @@ Output-equivalence across decode paths lives in test_decode_parity.py —
 the cross-path matrix replaced the per-path parity checks that used to
 accumulate here PR by PR."""
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models import transformer as T
 from repro.serve.engine import ServeEngine
-from repro.serve.sampler import SamplingParams
 from repro.serve.step import bucket_len
 
 V = 41

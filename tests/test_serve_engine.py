@@ -2,7 +2,6 @@
 equivalence with the plain decode loop."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig

@@ -63,9 +63,10 @@ def test_population_freezes_divergent_member():
     csv = synthetic.classification_csv(400, 6, 3, seed=2)
     ds = pipeline.prepare(csv, "label")
     ctx = {"datasets": {"default": ds}}
-    mk = lambda lr, s: TaskSpec.make("pop", "dnn_train", {
-        "hidden_sizes": [16], "activations": ["relu"], "lr": lr,
-        "optimizer": "sgd", "epochs": 2, "batch_size": 64, "seed": s})
+    def mk(lr, s):
+        return TaskSpec.make("pop", "dnn_train", {
+            "hidden_sizes": [16], "activations": ["relu"], "lr": lr,
+            "optimizer": "sgd", "epochs": 2, "batch_size": 64, "seed": s})
     block = [mk(1e-2, 0), mk(1e-2, 1), mk(1e12, 2)]   # third diverges
     docs = train_population(block, ctx)
     statuses = [d["status"] for d in docs]
