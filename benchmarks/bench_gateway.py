@@ -12,6 +12,8 @@ perf trajectory is recorded in-tree, not just printed.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 
 from benchmarks._util import smoke_requested, write_bench_json
@@ -19,11 +21,15 @@ from repro.configs import registry
 from repro.gateway.gateway import Gateway
 from repro.gateway.sampler import SamplingParams
 from repro.models import transformer as T
+from repro.obs import trace as otrace
 from repro.serve.engine import ServeEngine
 
 POLICIES = ("round-robin", "least-loaded")
 LOADS = (4, 12)            # offered requests per run (2 replicas x 2 slots)
 REPLICAS, SLOTS, MAX_NEW = 2, 2, 8
+# machine-checked bar: enabling the span tracer may cost < 3% wall on the
+# gateway's closed-loop workload (the tracer's design contract)
+TRACING_OVERHEAD_BAR = 0.03
 
 
 def _summaries_to_rows(cell, n, done, s, kv=None):
@@ -100,8 +106,54 @@ def run(smoke: bool = False) -> list:
                 f"reused {kv['tokens_reused']} tok "
                 f"{len(done)}/{n} reqs"))
     json_rows.append(_summaries_to_rows(cell, n, done, s, kv))
+
+    # tracing-overhead cell: the span tracer's contract is "near-free when
+    # on" — machine-check it here, where the full dispatch/decode path is
+    # instrumented. The same closed-loop workload runs with tracing off and
+    # on, interleaved per rep so machine load drift hits both modes
+    # equally; best-of-reps wall per mode cancels scheduler noise. Engines
+    # are already jit-warm from the sweep above, so the delta is pure
+    # host-side span accounting.
+    n = loads[0]
+    reps = 3 if smoke else 5
+
+    def _drive_once() -> float:
+        gw = Gateway(engines, policy="round-robin")
+        for i in range(n):
+            gw.submit([(5 * i + j) % cfg.vocab_size
+                       for j in range(3 + i % 3)],
+                      max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        gw.run()
+        return time.perf_counter() - t0
+
+    walls = {False: [], True: []}
+    for _ in range(reps):
+        for traced in (False, True):
+            if traced:
+                otrace.enable()
+            walls[traced].append(_drive_once())
+            if traced:
+                otrace.disable()
+    wall_off, wall_on = min(walls[False]), min(walls[True])
+    overhead = wall_on / wall_off - 1.0
+    if overhead >= TRACING_OVERHEAD_BAR:
+        raise AssertionError(
+            f"span tracing costs {overhead * 100:.1f}% wall on the gateway "
+            f"workload (bar is {TRACING_OVERHEAD_BAR * 100:.0f}%)")
+    cell = "gateway_tracing_overhead"
+    out.append((cell, wall_on / max(n * max_new, 1) * 1e6,
+                f"{overhead * 100:+.1f}% wall with tracing on "
+                f"(bar <{TRACING_OVERHEAD_BAR * 100:.0f}%, "
+                f"best of {reps})"))
+    json_rows.append({"cell": cell, "offered": n, "reps": reps,
+                      "wall_off_s": wall_off, "wall_traced_s": wall_on,
+                      "overhead_frac": overhead,
+                      "within_bar": overhead < TRACING_OVERHEAD_BAR})
+
     write_bench_json("gateway", json_rows,
                      meta={"replicas": REPLICAS, "slots": SLOTS,
-                           "max_new": max_new, "arch": cfg.arch_id},
+                           "max_new": max_new, "arch": cfg.arch_id,
+                           "bar_max_overhead_frac": TRACING_OVERHEAD_BAR},
                      smoke=smoke)
     return out

@@ -1,0 +1,234 @@
+"""Bench regression gate: machine-diff the committed perf trajectory.
+
+The committed ``BENCH_<name>.json`` files at the repo root are the
+recorded perf trajectory (full local runs); each also carries its own
+quality bars in ``meta`` (``bar_<field>``: some row must reach the bar,
+``bar_max_<field>``: no row may exceed it). This gate — wired into CI as
+``python -m benchmarks.run --check`` — machine-checks both the committed
+files and a fresh smoke re-run, so a regression (or a schema drift that
+would silently blind the trajectory) fails the job instead of waiting for
+a human to eyeball CSV scrollback:
+
+  1. **Committed-file invariants.** Every committed file parses, has
+     rows, contains only finite numbers (an empty-series NaN leaking into
+     a summary once shipped exactly this way), every ``outputs_match*`` /
+     ``within_bar`` parity boolean is true, and every meta bar is met —
+     with zero tolerance, because the committed file *is* the full run
+     that claimed those numbers.
+  2. **Fresh smoke re-run.** The BENCH-writing modules re-run at smoke
+     shapes (writing ``BENCH_<name>.smoke.json``, never the committed
+     file) and the same invariants apply, with per-field noise tolerance
+     relaxing the bars — smoke shapes are tiny and jittery by design.
+     Modules additionally self-assert their hard bars in-run (speculative
+     speedup, stall cut, tracing overhead), so a real perf loss still
+     fails here, not just at full shapes.
+  3. **Schema drift.** Every field the committed rows carry must still be
+     produced by the fresh run (union over rows, per bench). Renaming or
+     dropping a field without regenerating the committed file would
+     otherwise turn the trajectory diff into silence.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from benchmarks._util import REPO_ROOT
+
+# benches with a committed BENCH_<name>.json -> benchmarks.run module key
+CHECKED_BENCHES = ("gateway", "kernels", "kvcache", "scheduler", "specdec")
+
+# booleans that must be true in every row carrying them
+_PARITY_PREFIXES = ("outputs_match", "within_bar")
+
+# relative slack applied to meta bars when judging a *fresh smoke* run:
+# tiny shapes are noisy by design. The committed full-run file gets zero
+# tolerance — it is the artifact that claimed those numbers. Fields not
+# listed get the default.
+FRESH_TOLERANCE: Dict[str, float] = {
+    "speedup_vs_single": 0.25,
+    "stall_cut": 0.25,
+    "overhead_frac": 1.0,      # up to 2x the overhead bar at smoke shapes
+}
+DEFAULT_FRESH_TOLERANCE = 0.25
+
+
+def _walk_numbers(obj, path: str):
+    """Yield (dotted_path, value) for every numeric leaf (bools excluded)."""
+    if isinstance(obj, bool):
+        return
+    if isinstance(obj, (int, float)):
+        yield path, float(obj)
+    elif isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from _walk_numbers(v, f"{path}.{k}")
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            yield from _walk_numbers(v, f"{path}[{i}]")
+
+
+def _row_fields(rows: List[dict]) -> set:
+    return {k for r in rows for k in r}
+
+
+def _bar_fields(rows: List[dict], f: str) -> List[str]:
+    """Row fields a meta bar named after `f` governs: the exact field or
+    any ``<f>_*`` elaboration (``bar_stall_cut`` governs
+    ``stall_cut_vs_phased``)."""
+    return sorted(k for k in _row_fields(rows)
+                  if k == f or k.startswith(f + "_"))
+
+
+def check_payload(payload: dict, *, label: str,
+                  tolerance: Optional[Dict[str, float]] = None) -> List[str]:
+    """All invariants one bench file must satisfy; returns problem strings
+    (empty = clean). `tolerance` relaxes meta bars per field (fresh smoke
+    runs); None means exact (committed files)."""
+    problems = []
+    rows = payload.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return [f"{label}: no rows"]
+    meta = payload.get("meta", {})
+
+    for path, v in _walk_numbers({"meta": meta, "rows": rows}, label):
+        if not math.isfinite(v):
+            problems.append(f"{path}: non-finite value {v!r}")
+
+    for i, row in enumerate(rows):
+        for k, v in row.items():
+            if k.startswith(_PARITY_PREFIXES) and v is not True:
+                problems.append(
+                    f"{label}.rows[{i}] ({row.get('cell', '?')}): "
+                    f"{k} is {v!r}, expected True")
+
+    # meta bars: "bar_max_<f>" caps every row carrying <f>; "bar_<f>"
+    # demands at least one row reach it (sweeps include context cells —
+    # baselines, adversarial drafters — that sit below the bar on purpose)
+    for key, bar in meta.items():
+        if not isinstance(bar, (int, float)) or isinstance(bar, bool):
+            continue
+        if key.startswith("bar_max_"):
+            f = key[len("bar_max_"):]
+            fields = _bar_fields(rows, f)
+            if not fields:
+                problems.append(f"{label}: meta has {key} but no row "
+                                f"carries a {f!r} field")
+                continue
+            tol = (tolerance or {}).get(f, DEFAULT_FRESH_TOLERANCE) \
+                if tolerance is not None else 0.0
+            limit = bar * (1.0 + tol)
+            for i, row in enumerate(rows):
+                for fld in fields:
+                    if row.get(fld) is not None and row[fld] > limit:
+                        problems.append(
+                            f"{label}.rows[{i}] ({row.get('cell', '?')}): "
+                            f"{fld}={row[fld]:.4g} exceeds bar "
+                            f"{key}={bar:.4g}"
+                            + (f" (tolerance {tol:.0%})" if tol else ""))
+        elif key.startswith("bar_"):
+            f = key[len("bar_"):]
+            fields = _bar_fields(rows, f)
+            vals = [row[fld] for row in rows for fld in fields
+                    if row.get(fld) is not None]
+            if not vals:
+                problems.append(f"{label}: meta has {key} but no row "
+                                f"carries a {f!r} field")
+                continue
+            tol = (tolerance or {}).get(f, DEFAULT_FRESH_TOLERANCE) \
+                if tolerance is not None else 0.0
+            floor = bar * (1.0 - tol)
+            if max(vals) < floor:
+                problems.append(
+                    f"{label}: best {f}={max(vals):.4g} under bar "
+                    f"{key}={bar:.4g}"
+                    + (f" (tolerance {tol:.0%})" if tol else ""))
+    return problems
+
+
+def _load(path: Path) -> Optional[dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def check_committed(names=CHECKED_BENCHES) -> List[str]:
+    problems = []
+    for name in names:
+        path = REPO_ROOT / f"BENCH_{name}.json"
+        payload = _load(path)
+        if payload is None:
+            problems.append(f"{path.name}: missing or unparseable")
+            continue
+        problems += check_payload(payload, label=path.name, tolerance=None)
+    return problems
+
+
+def check_fresh(names=CHECKED_BENCHES) -> List[str]:
+    """Re-run the BENCH-writing modules at smoke shapes and hold the fresh
+    ``.smoke.json`` outputs to the (tolerance-relaxed) invariants, plus
+    the schema-drift diff against the committed files."""
+    problems = []
+    for name in names:
+        modname = f"benchmarks.bench_{name}"
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run(smoke=True)
+        except Exception as e:  # noqa: BLE001 — report every bench, not just the first
+            problems.append(f"{modname}: smoke run failed — "
+                            f"{type(e).__name__}: {e}")
+            continue
+        fresh = _load(REPO_ROOT / f"BENCH_{name}.smoke.json")
+        if fresh is None:
+            problems.append(f"BENCH_{name}.smoke.json: not written by "
+                            f"{modname}.run(smoke=True)")
+            continue
+        problems += check_payload(fresh, label=f"BENCH_{name}.smoke.json",
+                                  tolerance=FRESH_TOLERANCE)
+        committed = _load(REPO_ROOT / f"BENCH_{name}.json")
+        if committed is None:
+            continue        # already reported by check_committed
+        missing = _row_fields(committed.get("rows", [])) \
+            - _row_fields(fresh.get("rows", []))
+        if missing:
+            problems.append(
+                f"BENCH_{name}: schema drift — committed fields "
+                f"{sorted(missing)} no longer produced by a fresh run "
+                f"(regenerate the committed file or restore the fields)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-fresh", action="store_true",
+                    help="committed-file invariants only (no re-run)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names: "
+                    + ",".join(CHECKED_BENCHES))
+    args = ap.parse_args(argv)
+    names = tuple(args.only.split(",")) if args.only else CHECKED_BENCHES
+    unknown = set(names) - set(CHECKED_BENCHES)
+    if unknown:
+        ap.error(f"unknown bench names: {sorted(unknown)}")
+
+    problems = check_committed(names)
+    if not args.no_fresh:
+        problems += check_fresh(names)
+    for p in problems:
+        print(f"CHECK FAIL: {p}", file=sys.stderr)
+    n = len(names)
+    mode = "committed only" if args.no_fresh else "committed + fresh smoke"
+    if problems:
+        print(f"bench check: {len(problems)} problem(s) across {n} "
+              f"bench(es) [{mode}]")
+        return 1
+    print(f"bench check: OK — {n} bench(es) clean [{mode}]")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

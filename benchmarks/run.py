@@ -2,10 +2,17 @@
 and beyond-paper comparisons. Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6,...] [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --check
 
 ``--smoke`` runs every target with tiny shapes (and exports
 REPRO_BENCH_SMOKE=1 for modules that read it) — the CI benchmarks job uses
 this to catch bit-rot on every PR without paying full sweep time.
+
+``--check`` runs the bench regression gate instead of the sweep: the
+committed ``BENCH_*.json`` trajectory files are machine-checked (finite
+numbers, parity booleans, meta perf bars) and the BENCH-writing modules
+re-run at smoke shapes to catch perf regressions and schema drift — see
+``benchmarks/check.py``. Exit status is the gate verdict.
 """
 from __future__ import annotations
 
@@ -39,7 +46,21 @@ def main() -> None:
                     ",".join(k for k, _ in MODULES))
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for every target (CI bit-rot check)")
+    ap.add_argument("--check", action="store_true",
+                    help="run the bench regression gate (benchmarks/check.py)"
+                    " instead of the sweep")
+    ap.add_argument("--no-fresh", action="store_true",
+                    help="with --check: committed-file invariants only, "
+                    "skip the fresh smoke re-run")
     args = ap.parse_args()
+    if args.check:
+        from benchmarks import check
+        argv = []
+        if args.no_fresh:
+            argv.append("--no-fresh")
+        if args.only:
+            argv += ["--only", args.only]
+        sys.exit(check.main(argv))
     keys = set(args.only.split(",")) if args.only else None
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"

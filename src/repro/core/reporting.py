@@ -90,9 +90,18 @@ def to_markdown(rows: Sequence[Tuple], header: Sequence[str]) -> str:
 
 # ------------------------------------------------------- serving dashboards
 
+def _fmt_value(v) -> str:
+    """Dashboard cell: empty-series metrics arrive as None (never NaN —
+    see `gateway.metrics.percentile`) and render as an em-dash; a NaN that
+    slips in from any other producer gets the same treatment rather than
+    printing a literal `nan` row."""
+    if v is None or (isinstance(v, float) and np.isnan(v)):
+        return "—"
+    return f"{v:.3f}" if isinstance(v, float) else str(v)
+
+
 def _metric_table(metrics: Dict[str, float], header=("metric", "value")) -> str:
-    rows = [(k, f"{v:.3f}" if isinstance(v, float) else v)
-            for k, v in metrics.items()]
+    rows = [(k, _fmt_value(v)) for k, v in metrics.items()]
     return to_markdown(rows, header)
 
 
@@ -168,6 +177,39 @@ def gateway_dashboard(summary: Dict[str, float],
         parts += ["\n## active slots (Fig 7)",
                   ascii_scatter(active, xlabel="elapsed s",
                                 ylabel="busy slots")]
+    return "\n".join(parts)
+
+
+def engine_steps_table(steps: Dict[str, float]) -> str:
+    """Markdown table of the engine's host-side step-latency histogram
+    stats (`Gateway.engine_step_summary`): ``<kind>_<stat>`` rows in ms,
+    one group per step type (prefill/decode/fused/spec/mixed)."""
+    return _metric_table(steps, ("engine step metric", "value (ms)"))
+
+
+def trace_stats_table(tr: Dict[str, float]) -> str:
+    """Markdown table of the span tracer's ring-buffer counters
+    (`repro.obs.trace.Tracer.stats`)."""
+    return _metric_table(tr, ("tracer metric", "value"))
+
+
+def unified_dashboard(snapshot: Dict[str, dict],
+                      gauges: Sequence[Tuple[float, int, int]] = ()) -> str:
+    """One dashboard from one dict: renders a `Gateway.snapshot()` —
+    every registered metrics scope — as a single document. The gateway /
+    kvcache / speculation / scheduler sections are exactly the
+    `gateway_dashboard` ones (same tables, same Fig 6/7 gauge plots when
+    `gauges` is passed); the engine step-latency histograms and span
+    tracer counters introduced by the unified registry follow."""
+    parts = [gateway_dashboard(snapshot.get("gateway", {}), gauges,
+                               kvcache=snapshot.get("kvcache"),
+                               spec=snapshot.get("speculation"),
+                               scheduler=snapshot.get("scheduler"))]
+    if snapshot.get("engine_steps"):
+        parts += ["\n## engine step latency",
+                  engine_steps_table(snapshot["engine_steps"])]
+    if snapshot.get("trace"):
+        parts += ["\n## span tracer", trace_stats_table(snapshot["trace"])]
     return "\n".join(parts)
 
 

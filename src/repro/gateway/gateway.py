@@ -29,6 +29,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.queue import TaskQueue
 from repro.core.tasks import TaskSpec
 from repro.gateway.metrics import GatewayMetrics, RequestMetrics
+from repro.obs import trace as otrace
+from repro.obs.registry import MetricsRegistry
 from repro.gateway.sampler import GREEDY, SamplingParams
 from repro.gateway.streaming import TokenStream
 from repro.serve.engine import Request, ServeEngine
@@ -229,6 +231,17 @@ class Gateway:
         self._aborted: set = set()
         for r in self.replicas:
             self._wire(r)
+        # one registry unifies the per-silo summaries: each silo keeps its
+        # `*_summary()` API (they stay the tested, documented views) and is
+        # registered here as a snapshot scope, so `snapshot()` is the single
+        # coherent telemetry dict for the whole serving stack
+        self.registry = MetricsRegistry()
+        self.registry.register_scope("gateway", self.summary)
+        self.registry.register_scope("kvcache", self.kvcache_summary)
+        self.registry.register_scope("scheduler", self.scheduler_summary)
+        self.registry.register_scope("speculation", self.spec_summary)
+        self.registry.register_scope("engine_steps", self.engine_step_summary)
+        self.registry.register_scope("trace", self._trace_summary)
 
     @classmethod
     def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
@@ -259,6 +272,14 @@ class Gateway:
                ) -> GatewayRequest:
         """Publish one prompt to the queue; returns a handle whose `stream`
         yields tokens as they decode (iterating pumps the gateway)."""
+        with otrace.span("gateway.submit", prompt_len=len(prompt)):
+            return self._submit_impl(
+                prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
+                sampling=sampling, priority=priority, timeout_s=timeout_s,
+                on_token=on_token)
+
+    def _submit_impl(self, prompt, *, max_new_tokens, eos_id, sampling,
+                     priority, timeout_s, on_token) -> GatewayRequest:
         gid = next(self._gid)
         sampling = sampling or GREEDY
         payload = {"gid": gid, "run": self._run_id, "prompt": list(prompt),
@@ -333,6 +354,10 @@ class Gateway:
             and need <= eng.free_token_capacity()
 
     def _dispatch_ready(self):
+        with otrace.span("gateway.dispatch"):
+            self._dispatch_ready_impl()
+
+    def _dispatch_ready_impl(self):
         while True:
             eligible = self._eligible()
             if not eligible:
@@ -418,6 +443,8 @@ class Gateway:
         # the gateway keeps its own handles; don't also retain finished
         # Requests engine-side (a long-lived frontend would leak them)
         eng.retain_finished = False
+        # each replica's engine spans land on their own track in the trace
+        eng.trace_tid = replica.replica_id
 
         def on_token(req: Request, tok: int):
             gwreq = self._by_gid.get(req.request_id)
@@ -595,3 +622,34 @@ class Gateway:
                                       / agg["dispatches"]
                                       if agg["dispatches"] else 0.0)
         return agg
+
+    def engine_step_summary(self) -> Optional[dict]:
+        """Host-side engine step-latency histograms, merged exactly across
+        replicas (bucket-wise addition) and keyed by step type — prefill /
+        decode / fused / spec / mixed — then flattened to
+        ``<kind>_<stat>`` (ms) for the snapshot. None before any step."""
+        merged: Dict[str, object] = {}
+        for r in self.replicas:
+            for kind, h in r.engine.step_times.items():
+                prev = merged.get(kind)
+                merged[kind] = h if prev is None else prev.merge(h)
+        if not merged:
+            return None
+        out: Dict[str, object] = {}
+        for kind in sorted(merged):
+            for stat, v in merged[kind].summary().items():
+                out[f"{kind}_{stat}"] = v
+        return out
+
+    def _trace_summary(self) -> Optional[dict]:
+        """Span-tracer counters while tracing is on (None otherwise)."""
+        tr = otrace.active()
+        return tr.stats() if tr is not None else None
+
+    def snapshot(self) -> dict:
+        """The one coherent telemetry dict: every registered scope —
+        gateway request/latency stats, kvcache counters, scheduler and
+        speculation counters, engine step-latency histograms, tracer
+        state — in a single nested mapping. Scopes whose feature is off
+        are omitted. Rendered by `core.reporting.unified_dashboard`."""
+        return self.registry.snapshot()

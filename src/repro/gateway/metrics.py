@@ -10,6 +10,7 @@ training-sweep figures.
 """
 from __future__ import annotations
 
+import logging
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -17,15 +18,46 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import trace as otrace
+
+logger = logging.getLogger("repro.gateway")
+
 
 def now() -> float:
     return time.perf_counter()
 
 
-def percentile(xs: Sequence[float], p: float) -> float:
+def percentile(xs: Sequence[float], p: float) -> Optional[float]:
+    """Exact percentile over raw samples; None (NOT NaN) when the series
+    is empty — NaN used to leak through `summary()` into dashboard rows
+    and JSON files, where it is both unreadable and invalid JSON. None
+    survives `json.dump` as null and renders as an em-dash in
+    `core.reporting` tables."""
     if not xs:
-        return float("nan")
+        return None
     return float(np.percentile(np.asarray(xs, float), p))
+
+
+def _ms(x: Optional[float]) -> Optional[float]:
+    """Seconds -> milliseconds, passing empty-series None through."""
+    return None if x is None else x * 1e3
+
+
+# Legal request-lifecycle transitions. The strict chain is
+# queued -> running -> done|failed|rejected; the extra edges are the
+# gateway's real recovery paths: running -> queued is a replica-failure
+# requeue, queued -> rejected|failed covers deadline expiry / 429
+# admission rejection / total-outage abort before dispatch. Terminal
+# states have no exits — a caller trying to leave one is a lifecycle bug
+# (e.g. double-finish), which is logged and counted instead of silently
+# overwriting `status` and double-counting the aggregate counters.
+_TRANSITIONS = {
+    "queued": ("running", "rejected", "failed"),
+    "running": ("queued", "done", "rejected", "failed"),
+    "done": (),
+    "rejected": (),
+    "failed": (),
+}
 
 
 @dataclass
@@ -109,7 +141,22 @@ class GatewayMetrics:
         self.rejected = 0
         self.failed = 0
         self.retried = 0
+        self.illegal_transitions = 0
         self._t0: Optional[float] = None
+
+    def _transition(self, m: RequestMetrics, new: str) -> bool:
+        """Move `m` along the request lifecycle; refuse, log, and count an
+        illegal move (the caller must then skip its side effects — counter
+        bumps, timestamps — so aggregates stay consistent)."""
+        if new in _TRANSITIONS[m.status]:
+            m.status = new
+            return True
+        self.illegal_transitions += 1
+        logger.error("request %d: illegal state transition %s -> %s "
+                     "(keeping %s)", m.request_id, m.status, new, m.status)
+        assert _TRANSITIONS.get(new) is not None, \
+            f"unknown request state {new!r}"
+        return False
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, request_id: int, prompt_len: int) -> RequestMetrics:
@@ -122,6 +169,8 @@ class GatewayMetrics:
 
     def dispatch(self, request_id: int, replica_id: int):
         m = self.requests[request_id]
+        if not self._transition(m, "running"):
+            return
         if m.dispatch_t is not None:          # re-dispatch after failure
             m.retries += 1
             self.retried += 1
@@ -129,7 +178,6 @@ class GatewayMetrics:
             m.first_token_t = None
         m.dispatch_t = now()
         m.replica_id = replica_id
-        m.status = "running"
         self.dispatched += 1
 
     def token(self, request_id: int):
@@ -141,22 +189,51 @@ class GatewayMetrics:
 
     def requeue(self, request_id: int):
         """Replica failure sent the request back to the queue."""
-        self.requests[request_id].status = "queued"
+        self._transition(self.requests[request_id], "queued")
 
     def finish(self, request_id: int):
         m = self.requests[request_id]
+        if not self._transition(m, "done"):
+            return
         m.finish_t = now()
-        m.status = "done"
         self.completed += 1
+        self._emit_request_trace(m)
 
     def reject(self, request_id: int, *, status: str = "rejected"):
         m = self.requests[request_id]
+        if not self._transition(m, status):
+            return
         m.finish_t = now()
-        m.status = status
         if status == "rejected":
             self.rejected += 1
         else:
             self.failed += 1
+        self._emit_request_trace(m)
+
+    def _emit_request_trace(self, m: RequestMetrics):
+        """When tracing is enabled, lay the request's whole lifetime onto
+        its own track (pid `REQUEST_PID`, tid = gid): one submit->retire
+        span with queued/running phase spans nested inside — so the
+        Perfetto timeline answers "where did THIS request's latency go"
+        next to the host-side engine spans."""
+        tr = otrace.active()
+        if tr is None or m.submit_t is None or m.finish_t is None:
+            return
+        pid, tid = otrace.REQUEST_PID, m.request_id
+        tr.set_track_name(pid, tid, f"req{m.request_id}")
+        tr.add_span(f"req{m.request_id}", m.submit_t, m.finish_t,
+                    cat="request", pid=pid, tid=tid,
+                    args={"status": m.status, "prompt_len": m.prompt_len,
+                          "tokens": m.n_tokens, "replica": m.replica_id,
+                          "retries": m.retries})
+        if m.dispatch_t is not None:
+            tr.add_span("queued", m.submit_t, m.dispatch_t, cat="request",
+                        pid=pid, tid=tid)
+            tr.add_span("running", m.dispatch_t, m.finish_t, cat="request",
+                        pid=pid, tid=tid)
+        else:       # rejected before ever dispatching
+            tr.add_span("queued", m.submit_t, m.finish_t, cat="request",
+                        pid=pid, tid=tid)
 
     def record_gauges(self, queue_depth: int, active_slots: int):
         self.gauges.append((now(), queue_depth, active_slots))
@@ -184,21 +261,23 @@ class GatewayMetrics:
             "rejected": self.rejected,
             "failed": self.failed,
             "retried": self.retried,
+            "illegal_transitions": self.illegal_transitions,
             "total_tokens": total_tokens,
             "duration_s": duration,
             "throughput_tok_s": total_tokens / duration if duration else 0.0,
             "throughput_req_s": len(done) / duration if duration else 0.0,
-            "ttft_p50_ms": percentile(ttfts, 50) * 1e3,
-            "ttft_p90_ms": percentile(ttfts, 90) * 1e3,
-            "ttft_p99_ms": percentile(ttfts, 99) * 1e3,
-            "itl_p50_ms": percentile(itls, 50) * 1e3,
-            "itl_p95_ms": percentile(itls, 95) * 1e3,
-            "itl_p99_ms": percentile(itls, 99) * 1e3,
-            "itl_max_ms": (max(itls) * 1e3 if itls else float("nan")),
-            "stall_p50_ms": percentile(stalls, 50) * 1e3,
-            "stall_p95_ms": percentile(stalls, 95) * 1e3,
-            "stall_max_ms": (max(stalls) * 1e3 if stalls
-                             else float("nan")),
+            # empty series report None (rendered as an em-dash, serialized
+            # as JSON null), never NaN — see `percentile`
+            "ttft_p50_ms": _ms(percentile(ttfts, 50)),
+            "ttft_p90_ms": _ms(percentile(ttfts, 90)),
+            "ttft_p99_ms": _ms(percentile(ttfts, 99)),
+            "itl_p50_ms": _ms(percentile(itls, 50)),
+            "itl_p95_ms": _ms(percentile(itls, 95)),
+            "itl_p99_ms": _ms(percentile(itls, 99)),
+            "itl_max_ms": (max(itls) * 1e3 if itls else None),
+            "stall_p50_ms": _ms(percentile(stalls, 50)),
+            "stall_p95_ms": _ms(percentile(stalls, 95)),
+            "stall_max_ms": (max(stalls) * 1e3 if stalls else None),
             "mean_queue_depth": float(np.mean(depths)) if depths else 0.0,
             "mean_slot_utilization": float(np.mean(util)) if util else 0.0,
         }

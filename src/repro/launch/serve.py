@@ -13,6 +13,12 @@ from repro.core import reporting
 from repro.gateway.gateway import POLICIES, Gateway
 from repro.gateway.sampler import SamplingParams
 from repro.models import transformer as T
+from repro.obs import trace as otrace
+
+
+def _f(v, spec: str = ".1f") -> str:
+    """Format a possibly-None metric (empty series) as an em-dash."""
+    return "—" if v is None else format(v, spec)
 
 
 def main():
@@ -78,7 +84,14 @@ def main():
                     help="optional TaskQueue journal path (durable intake)")
     ap.add_argument("--dashboard", action="store_true",
                     help="print the full queue/slot dashboard after the run")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a span trace of the run and export it as "
+                    "Chrome trace events (load the file in "
+                    "https://ui.perfetto.dev)")
     args = ap.parse_args()
+
+    if args.trace:
+        otrace.enable()
 
     cfg = registry.get(args.arch, reduced=True)
     if cfg.is_encdec:
@@ -118,9 +131,9 @@ def main():
         print(f"  req{r.gid} (replica {r.replica_id}): "
               f"prompt={r.prompt} -> {r.output}")
     s = gw.summary()
-    print(f"[serve] ttft p50={s['ttft_p50_ms']:.1f}ms "
-          f"p99={s['ttft_p99_ms']:.1f}ms  "
-          f"itl p50={s['itl_p50_ms']:.2f}ms  "
+    print(f"[serve] ttft p50={_f(s['ttft_p50_ms'])}ms "
+          f"p99={_f(s['ttft_p99_ms'])}ms  "
+          f"itl p50={_f(s['itl_p50_ms'], '.2f')}ms  "
           f"util={s['mean_slot_utilization']:.2f}")
     kv = gw.kvcache_summary()
     if kv is not None:
@@ -139,10 +152,15 @@ def main():
         print(f"[serve] scheduler=chunked budget={sched['chunk_budget']} "
               f"chunks={sched['chunks_dispatched']} "
               f"tok/chunk={sched['tokens_per_chunk']:.1f} "
-              f"stall p95={s['stall_p95_ms']:.1f}ms")
+              f"stall p95={_f(s['stall_p95_ms'])}ms")
     if args.dashboard:
-        print(reporting.gateway_dashboard(s, gw.metrics.gauges, kvcache=kv,
-                                          spec=spec, scheduler=sched))
+        print(reporting.unified_dashboard(gw.snapshot(), gw.metrics.gauges))
+    if args.trace:
+        tr = otrace.disable()
+        path = tr.export(args.trace)
+        print(f"[serve] trace: {tr.recorded} spans recorded "
+              f"({tr.dropped} dropped) -> {path} "
+              f"(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,16 @@
+"""Observability subsystem: span tracing + one metrics registry.
+
+`trace` records named wall-clock spans along the request path (gateway
+submit -> dispatch -> engine step -> jit dispatch -> retire) into a ring
+buffer and exports Chrome trace events loadable in Perfetto; disabled by
+default and near-free when off. `registry` unifies the per-silo metric
+counters (gateway, kvcache, speculation, scheduler) behind one
+`MetricsRegistry` whose `snapshot()` is the single serving-telemetry
+dict — see `Gateway.snapshot()` and `core.reporting.unified_dashboard`.
+"""
+from repro.obs import trace
+from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
+                                DEFAULT_BUCKETS)
+
+__all__ = ["Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram",
+           "MetricsRegistry", "trace"]

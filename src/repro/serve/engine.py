@@ -69,14 +69,17 @@ Two paged-layout decode accelerators stack on top:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kvcache import KVCacheManager, PoolExhausted
+from repro.obs import trace as otrace
+from repro.obs.registry import Histogram
 from repro.models import transformer as T
 from repro.serve.draft import make_drafter
 from repro.serve.sampler import GREEDY, Sampler, SamplingParams
@@ -271,6 +274,12 @@ class ServeEngine:
                     cfg, window=window, return_logits=True))
         self._pending: List[Request] = []
         self._finished: List[Request] = []
+        # observability: spans land on this track (the gateway sets it to
+        # the replica id), and every step's wall time feeds a fixed-bucket
+        # histogram per step kind (prefill/decode/fused/spec/mixed) so the
+        # dashboard shows where dispatch time goes, not just token totals
+        self.trace_tid = 0
+        self.step_times: Dict[str, Histogram] = {}
         # long-lived frontends (the gateway) keep their own handles; set
         # False so finished requests are not retained engine-side forever
         self.retain_finished = True
@@ -349,7 +358,30 @@ class ServeEngine:
         return self.manager.metrics if self.manager is not None else None
 
     # ------------------------------------------------------------- internals
+    def _observe_step(self, kind: str, t0: float):
+        """Record one step's wall ms under its step kind."""
+        h = self.step_times.get(kind)
+        if h is None:
+            h = self.step_times[kind] = Histogram()
+        h.observe((time.perf_counter() - t0) * 1e3)
+
+    def step_summary(self) -> Optional[dict]:
+        """Per-step-kind wall-time stats (None before the first step):
+        {kind: {count, mean, p50, p95, max}} in milliseconds. The gateway
+        merges these histograms across replicas for the unified
+        dashboard's per-stage timing section."""
+        if not self.step_times:
+            return None
+        return {k: h.summary() for k, h in sorted(self.step_times.items())}
+
     def _admit(self):
+        if not self._pending:
+            return
+        with otrace.span("engine.admit", tid=self.trace_tid,
+                         pending=len(self._pending)):
+            self._admit_pending()
+
+    def _admit_pending(self):
         for slot in range(self.slots):
             if self.active[slot] is None and self._pending:
                 adm = None
@@ -400,6 +432,14 @@ class ServeEngine:
         """Fill this slot's cache from the prompt, merging only this slot's
         rows so peers are untouched. `adm` is the paged-layout Admission
         (block chain + reused-prefix length) from the manager."""
+        t0 = time.perf_counter()
+        with otrace.span("engine.step", tid=self.trace_tid, step="prefill",
+                         slot=slot, prompt_len=len(req.prompt),
+                         reused=(adm.n_reused if adm is not None else 0)):
+            self._prefill_slot_impl(slot, req, adm)
+        self._observe_step("prefill", t0)
+
+    def _prefill_slot_impl(self, slot: int, req: Request, adm=None):
         greedy = req.sampling.is_greedy
         if self.kv_layout == "paged":
             first = self._paged_prefill_slot(slot, req, adm)
@@ -570,6 +610,11 @@ class ServeEngine:
 
     def _retire(self, slot: int):
         req = self.active[slot]
+        with otrace.span("engine.retire", tid=self.trace_tid, slot=slot,
+                         request=req.request_id):
+            self._retire_impl(slot, req)
+
+    def _retire_impl(self, slot: int, req):
         req.done = True
         if self.scheduler is not None:
             self.scheduler.drop(slot)    # no-op unless mid-prefill
@@ -611,33 +656,41 @@ class ServeEngine:
             # first half of the burst, the wasted null-page forwards cost
             # more than the host round-trips saved — finish single-step
             return self._step_fused(live, toks, pos)
-        decode = self._decode_tok if greedy_batch else self._decode_lg
-        if self.kv_layout == "paged":
-            # no merge needed: every live slot scatters exactly into its
-            # own frontier page; empty slots' zero tables hit the null block
-            out, self.cache = decode(self.params, jnp.asarray(toks),
-                                     jnp.asarray(pos), self.cache,
-                                     jnp.asarray(self.table))
-        else:
-            out, new_cache = decode(self.params, jnp.asarray(toks),
-                                    jnp.asarray(pos), self.cache)
-            self.cache = _merge_slots(self.cache, new_cache, live)
-        out = np.asarray(out)
-        for s in live:
-            req = self.active[s]
-            self.pos[s] += 1
-            self.budget[s] -= 1
-            tok = int(out[s]) if greedy_batch else \
-                self._sample_safe(req, out[s])
-            if isinstance(tok, Exception):
-                self.budget[s] = 0
-                self._retire(s)
-                continue
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if not hit_eos:
-                self._emit(req, tok)
-            if hit_eos or self.budget[s] <= 0:
-                self._retire(s)
+        t0 = time.perf_counter()
+        with otrace.span("engine.step", tid=self.trace_tid, step="decode",
+                         live=len(live)):
+            decode = self._decode_tok if greedy_batch else self._decode_lg
+            with otrace.span("jit.decode", tid=self.trace_tid,
+                             kind="single", greedy=greedy_batch):
+                if self.kv_layout == "paged":
+                    # no merge needed: every live slot scatters exactly
+                    # into its own frontier page; empty slots' zero tables
+                    # hit the null block
+                    out, self.cache = decode(self.params, jnp.asarray(toks),
+                                             jnp.asarray(pos), self.cache,
+                                             jnp.asarray(self.table))
+                else:
+                    out, new_cache = decode(self.params, jnp.asarray(toks),
+                                            jnp.asarray(pos), self.cache)
+                    self.cache = _merge_slots(self.cache, new_cache, live)
+                otrace.fence((out, self.cache))
+            out = np.asarray(out)
+            for s in live:
+                req = self.active[s]
+                self.pos[s] += 1
+                self.budget[s] -= 1
+                tok = int(out[s]) if greedy_batch else \
+                    self._sample_safe(req, out[s])
+                if isinstance(tok, Exception):
+                    self.budget[s] = 0
+                    self._retire(s)
+                    continue
+                hit_eos = req.eos_id is not None and tok == req.eos_id
+                if not hit_eos:
+                    self._emit(req, tok)
+                if hit_eos or self.budget[s] <= 0:
+                    self._retire(s)
+        self._observe_step("decode", t0)
         return len(live)
 
     def _step_mixed(self) -> int:
@@ -653,6 +706,13 @@ class ServeEngine:
         them mid-prefill), and — when it completes the prompt — samples
         the deferred first token from the chunk's last-position logits
         and flips the slot to decoding."""
+        t0 = time.perf_counter()
+        with otrace.span("engine.step", tid=self.trace_tid, step="mixed"):
+            n = self._step_mixed_impl()
+        self._observe_step("mixed", t0)
+        return n
+
+    def _step_mixed_impl(self) -> int:
         sched = self.scheduler
         plan = sched.plan_chunk(
             {s: self.active[s].prompt for s in range(self.slots)
@@ -684,12 +744,15 @@ class ServeEngine:
         need_logits = (bool(decode_live) and not greedy_batch) or \
             (plan.completes and not creq.sampling.is_greedy)
         mixed = self._mixed_lg if need_logits else self._mixed_tok
-        out_d, out_c, self.cache = mixed(
-            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
-            jnp.asarray(tbl), jnp.asarray(ctoks),
-            jnp.asarray(plan.start, jnp.int32),
-            jnp.asarray(len(plan.tokens), jnp.int32),
-            jnp.asarray(self.table[plan.slot, :nbp]))
+        with otrace.span("jit.mixed", tid=self.trace_tid,
+                         decoding=len(decode_live), chunk=len(plan.tokens)):
+            out_d, out_c, self.cache = mixed(
+                self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+                jnp.asarray(tbl), jnp.asarray(ctoks),
+                jnp.asarray(plan.start, jnp.int32),
+                jnp.asarray(len(plan.tokens), jnp.int32),
+                jnp.asarray(self.table[plan.slot, :nbp]))
+            otrace.fence((out_d, out_c, self.cache))
         sched.mixed_dispatches += 1
         out_d = np.asarray(out_d)
         for s in decode_live:
@@ -725,6 +788,14 @@ class ServeEngine:
         reconciles the device's view back into host bookkeeping — tokens
         emitted per slot, pos/budget advanced by the steps actually taken,
         finished slots retired."""
+        t0 = time.perf_counter()
+        with otrace.span("engine.step", tid=self.trace_tid, step="fused",
+                         live=len(live), fused_tokens=self.fused_tokens):
+            n = self._step_fused_impl(live, toks, pos)
+        self._observe_step("fused", t0)
+        return n
+
+    def _step_fused_impl(self, live, toks, pos) -> int:
         eos = np.full((self.slots,), -1, np.int32)
         steps = np.zeros((self.slots,), np.int32)
         alive = np.zeros((self.slots,), bool)
@@ -734,10 +805,12 @@ class ServeEngine:
                 eos[s] = req.eos_id
             steps[s] = self.budget[s]
             alive[s] = True
-        emitted, live_out, steps_out, self.cache = self._decode_fused(
-            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
-            jnp.asarray(self.table), jnp.asarray(eos), jnp.asarray(alive),
-            jnp.asarray(steps))
+        with otrace.span("jit.fused", tid=self.trace_tid, live=len(live)):
+            emitted, live_out, steps_out, self.cache = self._decode_fused(
+                self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+                jnp.asarray(self.table), jnp.asarray(eos), jnp.asarray(alive),
+                jnp.asarray(steps))
+            otrace.fence((emitted, self.cache))
         emitted = np.asarray(emitted)
         live_out = np.asarray(live_out)
         steps_out = np.asarray(steps_out)
@@ -764,21 +837,32 @@ class ServeEngine:
         `KVCacheManager.rollback` audits the trimmed page range (never
         radix-shared, never freed) and counts it; device-side the rewind
         alone suffices because every read masks beyond the frontier."""
+        t0 = time.perf_counter()
+        with otrace.span("engine.step", tid=self.trace_tid, step="spec",
+                         live=len(live), spec_tokens=self.spec_tokens):
+            n = self._step_spec_impl(live, toks, pos)
+        self._observe_step("spec", t0)
+        return n
+
+    def _step_spec_impl(self, live, toks, pos) -> int:
         K = self.spec_tokens
         # packed per-slot operands: draft | eos | steps | live (see builder)
         inp = np.zeros((self.slots, K + 3), np.int32)
         inp[:, K] = -1
         steps = np.zeros((self.slots,), np.int32)
-        for s in live:
-            req = self.active[s]
-            inp[s, :K] = self.drafter.propose(req.prompt + req.output, K)
-            if req.eos_id is not None:
-                inp[s, K] = req.eos_id
-            inp[s, K + 1] = steps[s] = self.budget[s]
-            inp[s, K + 2] = 1
-        out, self.cache = self._decode_spec(
-            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
-            jnp.asarray(self.table), jnp.asarray(inp))
+        with otrace.span("draft", tid=self.trace_tid, live=len(live), k=K):
+            for s in live:
+                req = self.active[s]
+                inp[s, :K] = self.drafter.propose(req.prompt + req.output, K)
+                if req.eos_id is not None:
+                    inp[s, K] = req.eos_id
+                inp[s, K + 1] = steps[s] = self.budget[s]
+                inp[s, K + 2] = 1
+        with otrace.span("jit.verify", tid=self.trace_tid, live=len(live)):
+            out, self.cache = self._decode_spec(
+                self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+                jnp.asarray(self.table), jnp.asarray(inp))
+            otrace.fence((out, self.cache))
         out = np.asarray(out)           # one packed transfer (see builder)
         emitted, adv, n_acc, live_out, steps_out = \
             out[:K + 1], out[K + 1], out[K + 2], out[K + 3], out[K + 4]
