@@ -193,23 +193,100 @@ def trace_stats_table(tr: Dict[str, float]) -> str:
     return _metric_table(tr, ("tracer metric", "value"))
 
 
+def slo_dashboard(slo: Dict[str, dict]) -> str:
+    """Render an `SLOTracker.report()`: one row per tier (premium first)
+    with attainment / goodput / shed-by-cause, a per-tenant table when
+    tenants were tagged, and the overall roll-up line. `attainment` is
+    met/finished over *served* requests; shed and failed requests are
+    separate columns — a 429 is a capacity decision, not a latency miss."""
+    header = ("tier", "spec", "submitted", "finished", "attainment",
+              "goodput tok/s", "shed(deadline)", "shed(429)", "failed")
+    rows = []
+    for tier, d in sorted(slo.get("tiers", {}).items(),
+                          key=lambda kv: int(kv[0])):
+        rows.append((tier, d.get("spec", "?"), d["submitted"], d["finished"],
+                     _fmt_value(d["attainment"]),
+                     _fmt_value(d["goodput_tok_s"]),
+                     d["shed_deadline"], d["shed_capacity_429"], d["failed"]))
+    parts = ["## SLO attainment by tier", to_markdown(rows, header)]
+    tenants = slo.get("tenants", {})
+    if tenants:
+        theader = ("tenant", "tier", "submitted", "finished", "attainment",
+                   "shed(deadline)", "shed(429)", "failed")
+        trows = [(name, d.get("tier", 0), d["submitted"], d["finished"],
+                  _fmt_value(d["attainment"]),
+                  d["shed_deadline"], d["shed_capacity_429"], d["failed"])
+                 for name, d in sorted(tenants.items())]
+        parts += ["\n### per tenant", to_markdown(trows, theader)]
+    o = slo.get("overall")
+    if o:
+        parts.append(
+            f"\noverall: {o['met']}/{o['finished']} met "
+            f"(attainment {_fmt_value(o['attainment'])}), goodput "
+            f"{_fmt_value(o['goodput_tok_s'])} tok/s over "
+            f"{_fmt_value(o['duration_s'])} s")
+    return "\n".join(parts)
+
+
+def flight_stats_table(fl: Dict[str, object]) -> str:
+    """Markdown table of the flight recorder's state
+    (`repro.obs.flight.FlightRecorder.stats`)."""
+    fl = dict(fl)
+    triggers = fl.pop("triggers", {}) or {}
+    for reason, n in sorted(triggers.items()):
+        fl[f"trigger_{reason}"] = n
+    return _metric_table(fl, ("flight recorder", "value"))
+
+
+def _health_warnings(snapshot: Dict[str, dict]) -> List[str]:
+    """The things that must not be buried in scope dicts: dropped trace
+    spans (the timeline is lying about what happened), illegal lifecycle
+    transitions (a state-machine bug), and flight-recorder dumps (an
+    anomaly trigger fired). Surfaced as a warning block at the very top
+    of the dashboard when nonzero."""
+    warns = []
+    dropped = (snapshot.get("trace") or {}).get("spans_dropped", 0)
+    if dropped:
+        warns.append(f"⚠ tracer dropped {dropped} spans (ring buffer "
+                     "full — raise capacity or trace a shorter window)")
+    illegal = (snapshot.get("gateway") or {}).get("illegal_transitions", 0)
+    if illegal:
+        warns.append(f"⚠ {illegal} illegal request-lifecycle transitions "
+                     "(state-machine bug — see logs / flight recorder)")
+    fl = snapshot.get("flight") or {}
+    if fl.get("dumps"):
+        warns.append(f"⚠ flight recorder fired {fl['dumps']} dump(s), "
+                     f"last: {fl.get('last_dump')}")
+    return warns
+
+
 def unified_dashboard(snapshot: Dict[str, dict],
                       gauges: Sequence[Tuple[float, int, int]] = ()) -> str:
     """One dashboard from one dict: renders a `Gateway.snapshot()` —
-    every registered metrics scope — as a single document. The gateway /
-    kvcache / speculation / scheduler sections are exactly the
-    `gateway_dashboard` ones (same tables, same Fig 6/7 gauge plots when
-    `gauges` is passed); the engine step-latency histograms and span
-    tracer counters introduced by the unified registry follow."""
-    parts = [gateway_dashboard(snapshot.get("gateway", {}), gauges,
-                               kvcache=snapshot.get("kvcache"),
-                               spec=snapshot.get("speculation"),
-                               scheduler=snapshot.get("scheduler"))]
+    every registered metrics scope — as a single document. Health
+    warnings (dropped spans, illegal transitions, flight-recorder dumps)
+    lead; the gateway / kvcache / speculation / scheduler sections are
+    exactly the `gateway_dashboard` ones (same tables, same Fig 6/7 gauge
+    plots when `gauges` is passed); the SLO, engine step-latency, span
+    tracer, and flight-recorder sections follow."""
+    parts = []
+    warns = _health_warnings(snapshot)
+    if warns:
+        parts.append("\n".join(warns) + "\n")
+    parts.append(gateway_dashboard(snapshot.get("gateway", {}), gauges,
+                                   kvcache=snapshot.get("kvcache"),
+                                   spec=snapshot.get("speculation"),
+                                   scheduler=snapshot.get("scheduler")))
+    if snapshot.get("slo"):
+        parts += ["", slo_dashboard(snapshot["slo"])]
     if snapshot.get("engine_steps"):
         parts += ["\n## engine step latency",
                   engine_steps_table(snapshot["engine_steps"])]
     if snapshot.get("trace"):
         parts += ["\n## span tracer", trace_stats_table(snapshot["trace"])]
+    if snapshot.get("flight"):
+        parts += ["\n## flight recorder",
+                  flight_stats_table(snapshot["flight"])]
     return "\n".join(parts)
 
 

@@ -150,6 +150,8 @@ class GatewayRequest:
     sampling: SamplingParams
     priority: int = 0
     deadline: Optional[float] = None          # absolute perf_counter time
+    tenant: Optional[str] = None              # multi-tenant attribution
+    tier: int = 0                             # priority tier, 0 = premium
     stream: TokenStream = None
     metrics: RequestMetrics = None
     replica_id: Optional[int] = None
@@ -188,7 +190,8 @@ class Gateway:
                  session_id: str = "serve",
                  lease_seconds: float = 30.0,
                  max_retries: int = 2,
-                 admit_budget: Optional[int] = None):
+                 admit_budget: Optional[int] = None,
+                 slo=None, flight=None):
         """admit_budget enables admission control *by token budget* rather
         than slot count: a request's demand is prompt_len + max_new_tokens,
         and (a) demand > admit_budget (or > every replica's per-request
@@ -242,6 +245,41 @@ class Gateway:
         self.registry.register_scope("speculation", self.spec_summary)
         self.registry.register_scope("engine_steps", self.engine_step_summary)
         self.registry.register_scope("trace", self._trace_summary)
+        # SLO tracker / flight recorder: lifecycle observers with registry
+        # scopes, attachable at construction or later (set_slo /
+        # arm_flight_recorder) — `slo` may also be a {tier: SLOSpec} dict
+        self.slo = None
+        self.flight = None
+        if slo is not None:
+            self.set_slo(slo)
+        if flight is not None:
+            self.arm_flight_recorder(flight)
+
+    def set_slo(self, slo) -> "SLOTracker":
+        """Attach per-tier SLO tracking: every terminal request is judged
+        live and the report rides `snapshot()["slo"]`. Accepts an
+        `SLOTracker` or a {tier: SLOSpec} mapping."""
+        from repro.obs.slo import SLOTracker
+        tracker = slo if isinstance(slo, SLOTracker) else SLOTracker(slo)
+        self.slo = tracker
+        self.metrics.observers.append(tracker)
+        self.registry.register_scope("slo", tracker.report)
+        return tracker
+
+    def arm_flight_recorder(self, flight="flightrec") -> "FlightRecorder":
+        """Attach + arm the anomaly flight recorder (its dump triggers
+        include SLO breaches when `set_slo` was called first). Accepts a
+        `FlightRecorder` or an output directory for a default one."""
+        from repro.obs.flight import FlightRecorder
+        rec = flight if isinstance(flight, FlightRecorder) \
+            else FlightRecorder(flight)
+        if rec.slo is None:
+            rec.slo = self.slo
+        self.flight = rec
+        rec.arm()
+        self.metrics.observers.append(rec)
+        self.registry.register_scope("flight", rec.stats)
+        return rec
 
     @classmethod
     def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
@@ -268,24 +306,30 @@ class Gateway:
                eos_id: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
                priority: int = 0, timeout_s: Optional[float] = None,
+               tenant: Optional[str] = None, tier: int = 0,
                on_token: Optional[Callable[[int], None]] = None
                ) -> GatewayRequest:
         """Publish one prompt to the queue; returns a handle whose `stream`
-        yields tokens as they decode (iterating pumps the gateway)."""
+        yields tokens as they decode (iterating pumps the gateway).
+        `tenant`/`tier` tag the request for per-tenant telemetry and SLO
+        judgment; they ride the durable payload, so journal recovery keeps
+        the attribution."""
         with otrace.span("gateway.submit", prompt_len=len(prompt)):
             return self._submit_impl(
                 prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
                 sampling=sampling, priority=priority, timeout_s=timeout_s,
-                on_token=on_token)
+                tenant=tenant, tier=tier, on_token=on_token)
 
     def _submit_impl(self, prompt, *, max_new_tokens, eos_id, sampling,
-                     priority, timeout_s, on_token) -> GatewayRequest:
+                     priority, timeout_s, tenant, tier,
+                     on_token) -> GatewayRequest:
         gid = next(self._gid)
         sampling = sampling or GREEDY
         payload = {"gid": gid, "run": self._run_id, "prompt": list(prompt),
                    "max_new_tokens": max_new_tokens, "eos_id": eos_id,
                    "sampling": sampling.to_payload(),
-                   "timeout_s": timeout_s}
+                   "timeout_s": timeout_s,
+                   "tenant": tenant, "tier": tier}
         spec = TaskSpec.make(self.session_id, "serve_lm", payload,
                              priority=priority, max_retries=self.max_retries)
         gwreq = GatewayRequest(
@@ -294,15 +338,17 @@ class Gateway:
             priority=priority,
             deadline=(time.perf_counter() + timeout_s
                       if timeout_s is not None else None),
+            tenant=tenant, tier=tier,
             stream=TokenStream(pump=self.step, on_token=on_token))
-        gwreq.metrics = self.metrics.submit(gid, len(prompt))
+        gwreq.metrics = self.metrics.submit(gid, len(prompt), tenant=tenant,
+                                            tier=tier, deadline_s=timeout_s)
         self._by_gid[gid] = gwreq
         self._by_task[spec.task_id] = gwreq
         if self._over_capacity(self._demand(gwreq)):
             # terminal 429 before the queue ever sees it: the request can
             # never fit, journaling it would only leak an undeliverable task
             gwreq.stream.finish(reason="over_capacity", code=429)
-            self.metrics.reject(gid)
+            self.metrics.reject(gid, reason="over_capacity")
             return gwreq
         self.queue.put(spec)
         return gwreq
@@ -422,8 +468,11 @@ class Gateway:
             priority=spec.priority,
             deadline=(time.perf_counter() + p["timeout_s"]
                       if p.get("timeout_s") is not None else None),
+            tenant=p.get("tenant"), tier=int(p.get("tier", 0)),
             stream=TokenStream(pump=self.step))
-        gwreq.metrics = self.metrics.submit(gid, len(gwreq.prompt))
+        gwreq.metrics = self.metrics.submit(
+            gid, len(gwreq.prompt), tenant=gwreq.tenant, tier=gwreq.tier,
+            deadline_s=p.get("timeout_s"))
         self._by_gid[gid] = gwreq
         self._by_task[spec.task_id] = gwreq
         return gwreq
@@ -435,7 +484,7 @@ class Gateway:
         decode compute (an ack removes it; the journal keeps the record)."""
         self.queue.ack(task_id)
         gwreq.stream.finish(reason=reason, code=code)
-        self.metrics.reject(gwreq.gid)
+        self.metrics.reject(gwreq.gid, reason=reason)
 
     # -------------------------------------------------------- engine hooks
     def _wire(self, replica: EngineReplica):
@@ -462,7 +511,8 @@ class Gateway:
                 # request-scoped failure (e.g. sampling blew up on NaN
                 # logits): deterministic, so retry is pointless — ack and
                 # fail just this request, replica stays healthy
-                self.metrics.reject(gwreq.gid, status="failed")
+                self.metrics.reject(gwreq.gid, status="failed",
+                                    reason="request_error")
             else:
                 self.metrics.finish(gwreq.gid)
             gwreq.stream.finish()
@@ -476,6 +526,8 @@ class Gateway:
         its leased requests so the queue re-delivers them (to other
         replicas) or dead-letters after max_retries."""
         replica.healthy = False
+        if self.flight is not None:
+            self.flight.note_replica_failure(replica.replica_id, repr(err))
         victims = [(tid, gwreq) for tid, (gwreq, r) in self._inflight.items()
                    if r is replica]
         for tid, gwreq in victims:
@@ -485,7 +537,8 @@ class Gateway:
             gwreq.stream.reset()
             if self.queue.nack(tid):            # retries exhausted
                 gwreq.stream.finish()
-                self.metrics.reject(gwreq.gid, status="failed")
+                self.metrics.reject(gwreq.gid, status="failed",
+                                    reason="retries_exhausted")
             else:
                 self.metrics.requeue(gwreq.gid)
 
@@ -505,7 +558,8 @@ class Gateway:
                 gwreq = self._adopt(spec)
             if not gwreq.finished:
                 gwreq.stream.finish()
-                self.metrics.reject(gwreq.gid, status="failed")
+                self.metrics.reject(gwreq.gid, status="failed",
+                                    reason="outage")
 
     # ---------------------------------------------------------------- run
     def step(self) -> int:

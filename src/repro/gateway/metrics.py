@@ -72,6 +72,10 @@ class RequestMetrics:
     retries: int = 0
     replica_id: Optional[int] = None
     status: str = "queued"        # queued | running | done | rejected | failed
+    tenant: Optional[str] = None  # multi-tenant attribution (None = untagged)
+    tier: int = 0                 # priority tier, 0 = premium
+    deadline_s: Optional[float] = None   # submit-relative deadline, if any
+    finish_reason: Optional[str] = None  # why a terminal reject/fail happened
 
     @property
     def ttft(self) -> Optional[float]:
@@ -143,6 +147,20 @@ class GatewayMetrics:
         self.retried = 0
         self.illegal_transitions = 0
         self._t0: Optional[float] = None
+        # lifecycle observers: callables `(kind, m)` invoked after each
+        # lifecycle edge with the event kind ("submit", "dispatch",
+        # "first_token", "requeue", "finish", "reject", "illegal") and the
+        # RequestMetrics involved. SLO trackers and the flight recorder
+        # attach here — they watch the stream instead of polling, so a
+        # breach can trigger a dump while the evidence is still buffered.
+        self.observers: List = []
+
+    def _notify(self, kind: str, m: RequestMetrics):
+        for obs in self.observers:
+            try:
+                obs.lifecycle(kind, m)
+            except Exception:       # observers must never break serving
+                logger.exception("lifecycle observer failed on %s", kind)
 
     def _transition(self, m: RequestMetrics, new: str) -> bool:
         """Move `m` along the request lifecycle; refuse, log, and count an
@@ -156,15 +174,20 @@ class GatewayMetrics:
                      "(keeping %s)", m.request_id, m.status, new, m.status)
         assert _TRANSITIONS.get(new) is not None, \
             f"unknown request state {new!r}"
+        self._notify("illegal", m)
         return False
 
     # ------------------------------------------------------------ lifecycle
-    def submit(self, request_id: int, prompt_len: int) -> RequestMetrics:
+    def submit(self, request_id: int, prompt_len: int, *,
+               tenant: Optional[str] = None, tier: int = 0,
+               deadline_s: Optional[float] = None) -> RequestMetrics:
         t = now()
         if self._t0 is None:
             self._t0 = t
-        m = RequestMetrics(request_id, prompt_len, submit_t=t)
+        m = RequestMetrics(request_id, prompt_len, submit_t=t,
+                           tenant=tenant, tier=tier, deadline_s=deadline_s)
         self.requests[request_id] = m
+        self._notify("submit", m)
         return m
 
     def dispatch(self, request_id: int, replica_id: int):
@@ -179,17 +202,23 @@ class GatewayMetrics:
         m.dispatch_t = now()
         m.replica_id = replica_id
         self.dispatched += 1
+        self._notify("dispatch", m)
 
     def token(self, request_id: int):
         m = self.requests[request_id]
         t = now()
-        if m.first_token_t is None:
+        first = m.first_token_t is None
+        if first:
             m.first_token_t = t
         m.token_ts.append(t)
+        if first:
+            self._notify("first_token", m)
 
     def requeue(self, request_id: int):
         """Replica failure sent the request back to the queue."""
-        self._transition(self.requests[request_id], "queued")
+        m = self.requests[request_id]
+        if self._transition(m, "queued"):
+            self._notify("requeue", m)
 
     def finish(self, request_id: int):
         m = self.requests[request_id]
@@ -198,17 +227,21 @@ class GatewayMetrics:
         m.finish_t = now()
         self.completed += 1
         self._emit_request_trace(m)
+        self._notify("finish", m)
 
-    def reject(self, request_id: int, *, status: str = "rejected"):
+    def reject(self, request_id: int, *, status: str = "rejected",
+               reason: Optional[str] = None):
         m = self.requests[request_id]
         if not self._transition(m, status):
             return
         m.finish_t = now()
+        m.finish_reason = reason
         if status == "rejected":
             self.rejected += 1
         else:
             self.failed += 1
         self._emit_request_trace(m)
+        self._notify("reject", m)
 
     def _emit_request_trace(self, m: RequestMetrics):
         """When tracing is enabled, lay the request's whole lifetime onto
@@ -221,11 +254,15 @@ class GatewayMetrics:
             return
         pid, tid = otrace.REQUEST_PID, m.request_id
         tr.set_track_name(pid, tid, f"req{m.request_id}")
+        args = {"status": m.status, "prompt_len": m.prompt_len,
+                "tokens": m.n_tokens, "replica": m.replica_id,
+                "retries": m.retries, "tier": m.tier}
+        if m.tenant is not None:
+            args["tenant"] = m.tenant
+        if m.finish_reason is not None:
+            args["reason"] = m.finish_reason
         tr.add_span(f"req{m.request_id}", m.submit_t, m.finish_t,
-                    cat="request", pid=pid, tid=tid,
-                    args={"status": m.status, "prompt_len": m.prompt_len,
-                          "tokens": m.n_tokens, "replica": m.replica_id,
-                          "retries": m.retries})
+                    cat="request", pid=pid, tid=tid, args=args)
         if m.dispatch_t is not None:
             tr.add_span("queued", m.submit_t, m.dispatch_t, cat="request",
                         pid=pid, tid=tid)

@@ -1,6 +1,8 @@
 """Serving launcher: batched requests against a (reduced) model through the
 queue-backed gateway — replica dispatch policies, per-request sampling,
-optional token streaming, and a Fig 6/7-shaped telemetry dashboard."""
+optional token streaming, multi-tenant workload replay with per-tier SLO
+judgment, an armable anomaly flight recorder, and a Fig 6/7-shaped
+telemetry dashboard."""
 from __future__ import annotations
 
 import argparse
@@ -14,11 +16,59 @@ from repro.gateway.gateway import POLICIES, Gateway
 from repro.gateway.sampler import SamplingParams
 from repro.models import transformer as T
 from repro.obs import trace as otrace
+from repro.obs import slo as oslo
+from repro.obs import workload as owl
 
 
 def _f(v, spec: str = ".1f") -> str:
     """Format a possibly-None metric (empty series) as an em-dash."""
     return "—" if v is None else format(v, spec)
+
+
+def _drive(gw: Gateway, cfg, args) -> tuple:
+    """Submit the run's requests — a multi-tenant workload trace when
+    --workload is given, the synthetic prompt batch otherwise — and drive
+    the gateway to completion. Returns (done_handles, elapsed_s)."""
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed)
+    if args.workload:
+        if args.workload == "synth":
+            spec = owl.WorkloadSpec(
+                seed=args.seed if args.seed is not None else 0,
+                duration_s=args.workload_duration,
+                base_rate_rps=args.workload_rate,
+                vocab_size=cfg.vocab_size,
+                prompt_len_max=min(40, max(args.cache_len - args.max_new, 4)),
+                output_len_max=args.max_new)
+            requests = owl.generate(spec)
+        else:
+            spec = None
+            requests = owl.load_trace(args.workload)
+        if args.workload_out:
+            print("[serve] workload trace ->",
+                  owl.save_trace(args.workload_out, requests, spec))
+        tenants = sorted({r.tenant for r in requests})
+        print(f"[serve] workload: {len(requests)} requests from "
+              f"{len(tenants)} tenants "
+              f"({', '.join(tenants[:6])}{'…' if len(tenants) > 6 else ''})")
+        t0 = time.perf_counter()
+        handles = owl.replay(gw, requests, sampling=sampling)
+        dt = time.perf_counter() - t0
+        return [h for h in handles if h.done], dt
+    prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
+               for i in range(args.requests)]
+    for i, p in enumerate(prompts):
+        per_req = SamplingParams(
+            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+            seed=None if args.seed is None else args.seed + i)
+        on_token = ((lambda tok, rid=i: print(f"  req{rid} += {tok}"))
+                    if args.stream else None)
+        gw.submit(p, max_new_tokens=args.max_new,
+                  sampling=per_req, on_token=on_token)
+    t0 = time.perf_counter()
+    done = gw.run()
+    return done, time.perf_counter() - t0
 
 
 def main():
@@ -87,7 +137,33 @@ def main():
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="record a span trace of the run and export it as "
                     "Chrome trace events (load the file in "
-                    "https://ui.perfetto.dev)")
+                    "https://ui.perfetto.dev); exported even when the run "
+                    "raises mid-serve")
+    ap.add_argument("--workload", default=None, metavar="TRACE.json|synth",
+                    help="replace the synthetic prompt batch with a "
+                    "multi-tenant workload: a trace file written by "
+                    "repro.obs.workload.save_trace, or 'synth' to generate "
+                    "one from the default spec (seeded via --seed)")
+    ap.add_argument("--workload-duration", type=float, default=2.0,
+                    help="generated-workload duration in seconds "
+                    "(--workload synth)")
+    ap.add_argument("--workload-rate", type=float, default=12.0,
+                    help="generated-workload base arrival rate in req/s "
+                    "(--workload synth)")
+    ap.add_argument("--workload-out", default=None, metavar="TRACE.json",
+                    help="export the (generated) workload as a replayable "
+                    "trace file")
+    ap.add_argument("--slo", default=None, metavar="default|SPECS.json",
+                    help="judge every request against per-tier SLO targets: "
+                    "'default' for the built-in tier set, or a JSON file "
+                    "mapping tier -> {ttft_ms, itl_p95_ms, stall_ms, "
+                    "deadline_ms}; prints the SLO dashboard after the run")
+    ap.add_argument("--flight-recorder", default=None, nargs="?",
+                    const="flightrec", metavar="DIR",
+                    help="arm the anomaly flight recorder: on an SLO "
+                    "breach, illegal lifecycle transition, replica failure "
+                    "or shed spike, dump the span+lifecycle evidence rings "
+                    "to DIR/flightrec-*.json (default ./flightrec)")
     args = ap.parse_args()
 
     if args.trace:
@@ -98,6 +174,10 @@ def main():
         raise SystemExit("serve launcher drives decoder-only archs; "
                          "enc-dec serving goes through serve/step.py")
     params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    slo_tiers = None
+    if args.slo:
+        slo_tiers = (oslo.DEFAULT_TIER_SLOS if args.slo == "default"
+                     else oslo.load_slos(args.slo))
     gw = Gateway.build(params, cfg, replicas=args.replicas,
                        batch_slots=args.slots, cache_len=args.cache_len,
                        policy=args.policy, journal_path=args.journal,
@@ -108,21 +188,32 @@ def main():
                        spec_tokens=args.spec_tokens, drafter=args.drafter,
                        scheduler=args.scheduler,
                        chunk_budget=args.chunk_budget,
-                       admit_budget=args.admit_budget)
-    prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
-               for i in range(args.requests)]
-    reqs = []
-    for i, p in enumerate(prompts):
-        sampling = SamplingParams(
-            temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-            seed=None if args.seed is None else args.seed + i)
-        on_token = ((lambda tok, rid=i: print(f"  req{rid} += {tok}"))
-                    if args.stream else None)
-        reqs.append(gw.submit(p, max_new_tokens=args.max_new,
-                              sampling=sampling, on_token=on_token))
-    t0 = time.perf_counter()
-    done = gw.run()
-    dt = time.perf_counter() - t0
+                       admit_budget=args.admit_budget,
+                       slo=slo_tiers, flight=args.flight_recorder)
+    try:
+        done, dt = _drive(gw, cfg, args)
+    except BaseException as err:
+        # the crashed run is exactly when the evidence matters: force a
+        # flight-recorder dump before the finally-block trace export
+        if gw.flight is not None and gw.flight.armed:
+            path = gw.flight.trigger("exception", error=repr(err))
+            if path is not None:
+                print(f"[serve] flight recorder: exception dump -> {path}")
+        raise
+    finally:
+        if args.trace:
+            tr = otrace.disable()
+            if tr is not None:
+                path = tr.export(args.trace)
+                print(f"[serve] trace: {tr.recorded} spans recorded "
+                      f"({tr.dropped} dropped) -> {path} "
+                      f"(load in https://ui.perfetto.dev)")
+        if gw.flight is not None:
+            fl = gw.flight.stats()
+            if fl["dumps"]:
+                print(f"[serve] flight recorder: {fl['dumps']} dump(s), "
+                      f"last -> {fl['last_dump']}")
+            gw.flight.disarm()
     toks = sum(len(r.output) for r in done)
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s, {args.replicas}x{args.slots} slots, "
@@ -153,14 +244,10 @@ def main():
               f"chunks={sched['chunks_dispatched']} "
               f"tok/chunk={sched['tokens_per_chunk']:.1f} "
               f"stall p95={_f(s['stall_p95_ms'])}ms")
+    if gw.slo is not None:
+        print(reporting.slo_dashboard(gw.slo.report()))
     if args.dashboard:
         print(reporting.unified_dashboard(gw.snapshot(), gw.metrics.gauges))
-    if args.trace:
-        tr = otrace.disable()
-        path = tr.export(args.trace)
-        print(f"[serve] trace: {tr.recorded} spans recorded "
-              f"({tr.dropped} dropped) -> {path} "
-              f"(load in https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Observability subsystem: span tracing + one metrics registry.
+"""Observability subsystem: tracing, metrics, workloads, SLOs, post-mortems.
 
 `trace` records named wall-clock spans along the request path (gateway
 submit -> dispatch -> engine step -> jit dispatch -> retire) into a ring
@@ -7,10 +7,23 @@ default and near-free when off. `registry` unifies the per-silo metric
 counters (gateway, kvcache, speculation, scheduler) behind one
 `MetricsRegistry` whose `snapshot()` is the single serving-telemetry
 dict — see `Gateway.snapshot()` and `core.reporting.unified_dashboard`.
+
+On top of those instruments sit the production-shaped pieces: `workload`
+generates/replays seeded multi-tenant traces (heavy-tailed lengths,
+diurnal bursts, priority tiers), `slo` judges every request against its
+tier's latency targets live, and `flight` is the anomaly flight recorder
+that dumps the evidence rings to a Perfetto file when an SLO breach,
+illegal lifecycle transition, replica failure, or shed spike fires.
 """
 from repro.obs import trace
+from repro.obs import workload
 from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
                                 DEFAULT_BUCKETS)
+from repro.obs.slo import (DEFAULT_TIER_SLOS, SLOSpec, SLOTracker, load_slos,
+                           save_slos)
+from repro.obs.flight import FlightRecorder
 
-__all__ = ["Counter", "DEFAULT_BUCKETS", "Gauge", "Histogram",
-           "MetricsRegistry", "trace"]
+__all__ = ["Counter", "DEFAULT_BUCKETS", "DEFAULT_TIER_SLOS",
+           "FlightRecorder", "Gauge", "Histogram", "MetricsRegistry",
+           "SLOSpec", "SLOTracker", "load_slos", "save_slos", "trace",
+           "workload"]

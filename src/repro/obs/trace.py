@@ -107,6 +107,14 @@ class Tracer:
         self._track_names: Dict[Tuple[int, int], str] = {}
         self._epoch = time.perf_counter()
 
+    @property
+    def epoch(self) -> float:
+        """perf_counter origin of the exported timeline: every event's
+        ``ts`` is ``(t - epoch) * 1e6``. Public so companion exporters
+        (the flight recorder's lifecycle instants) can place their events
+        on the same clock as the span events."""
+        return self._epoch
+
     # -------------------------------------------------------- recording
     def span(self, name: str, *, cat: str = "serve", tid: int = 0,
              **args) -> _ActiveSpan:

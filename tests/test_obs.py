@@ -210,17 +210,22 @@ class TestTracer:
 
 def _assert_trace_schema(events):
     """The Chrome-trace contract the exporter promises: required fields
-    per phase, and begin/end consistency — spans sharing a track either
-    nest fully or are disjoint (the code is single-threaded per track, so
-    a partial overlap means a broken timestamp)."""
+    per phase (complete "X" spans, "M" metadata, and the flight
+    recorder's "i" instants), and begin/end consistency — spans sharing a
+    track either nest fully or are disjoint (the code is single-threaded
+    per track, so a partial overlap means a broken timestamp)."""
     assert events, "empty trace"
     by_track = {}
     for e in events:
-        assert e["ph"] in ("X", "M"), e
+        assert e["ph"] in ("X", "M", "i"), e
         assert {"ph", "name", "pid", "tid", "ts"} <= set(e), e
         if e["ph"] == "M":
             assert e["name"] in ("process_name", "thread_name")
             assert "name" in e["args"]
+            continue
+        if e["ph"] == "i":
+            # instant events carry a scope instead of a duration
+            assert e["s"] in ("g", "p", "t"), e
             continue
         assert "dur" in e and e["dur"] >= 0 and e["ts"] >= 0
         assert "cat" in e
@@ -429,6 +434,81 @@ class TestEmptySeries:
         s = gw.summary()
         assert s["rejected"] == 1 and s["ttft_p50_ms"] is None
         assert "—" in reporting.unified_dashboard(gw.snapshot())
+
+
+# ------------------------------------------ partial scopes + tiny series
+
+class TestPartialScopeMerges:
+    """Cross-replica registry merges when a replica contributes nothing:
+    a fleet where one replica never stepped (all work landed elsewhere,
+    or it was failed before its first step) must aggregate cleanly from
+    the replicas that did."""
+
+    def test_merge_with_idle_replica(self, model):
+        params, cfg = model
+        gw = Gateway.build(params, cfg, replicas=2, batch_slots=2,
+                           cache_len=32)
+        gw.submit(PROMPTS[0], max_new_tokens=3)
+        gw.run()
+        stepped = [r for r in gw.replicas if r.engine.step_times]
+        idle = [r for r in gw.replicas if not r.engine.step_times]
+        assert stepped and idle, "expected one active and one idle replica"
+        merged = gw.engine_step_summary()
+        assert merged["decode_count"] == \
+            stepped[0].engine.step_times["decode"].n
+        json.dumps(gw.snapshot(), allow_nan=False)      # and no NaN leaks
+
+    def test_merge_with_replica_failed_before_first_step(self, model):
+        params, cfg = model
+        gw = Gateway.build(params, cfg, replicas=2, batch_slots=2,
+                           cache_len=32)
+        gw.replicas[1].healthy = False      # down before any dispatch
+        for p in PROMPTS[:2]:
+            gw.submit(p, max_new_tokens=2)
+        done = gw.run()
+        assert len(done) == 2
+        merged = gw.engine_step_summary()
+        assert merged["decode_count"] == \
+            gw.replicas[0].engine.step_times["decode"].n
+        assert not gw.replicas[1].engine.step_times
+
+    def test_kvcache_scope_skips_dense_replicas(self, model):
+        """A mixed fleet: the kvcache scope aggregates only the replicas
+        that have a paged cache (provider None for the dense one)."""
+        params, cfg = model
+        engines = [ServeEngine(params, cfg, batch_slots=2, cache_len=32),
+                   ServeEngine(params, cfg, batch_slots=2, cache_len=32,
+                               kv_layout="paged", block_size=4)]
+        gw = Gateway(engines, policy="round-robin")
+        for p in PROMPTS[:2]:
+            gw.submit(p, max_new_tokens=2)
+        gw.run()
+        kv = gw.kvcache_summary()
+        assert kv is not None
+        assert kv == gw.replicas[1].engine.cache_metrics.as_dict()
+
+    def test_single_observation_histogram_percentiles(self):
+        h = Histogram()
+        h.observe(7.5)
+        assert h.percentile(50) == 7.5
+        assert h.percentile(95) == 7.5
+        assert h.percentile(100) == 7.5
+        s = h.summary()
+        assert s["count"] == 1
+        assert s["p50"] == s["p95"] == s["max"] == 7.5
+
+    def test_single_request_gateway_percentiles(self, model):
+        """One finished request: every percentile is the one sample, and
+        nothing renders as NaN."""
+        params, cfg = model
+        gw = Gateway.build(params, cfg, replicas=1, batch_slots=2,
+                           cache_len=32)
+        gw.submit(PROMPTS[0], max_new_tokens=3)
+        gw.run()
+        s = gw.summary()
+        assert s["ttft_p50_ms"] == s["ttft_p99_ms"]
+        assert s["stall_p50_ms"] == s["stall_max_ms"]
+        json.dumps(s, allow_nan=False)
 
 
 def test_sampled_parity_with_tracing(model):
