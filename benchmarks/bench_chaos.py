@@ -1,0 +1,225 @@
+"""Chaos benchmark: goodput and delivery integrity under injected faults.
+
+Runs the same seeded trace twice over one warmed two-replica fleet:
+
+  1. **oracle** — fault-free closed-loop replay; its outputs are ground
+     truth (greedy decode, so byte-identical replays are the contract).
+  2. **faulted** — identical trace under a seeded `FaultPlan`: two
+     mid-run replica crashes, a straggler window, and a KV pool-pressure
+     window, with probation-based reintegration and retry backoff armed.
+
+The machine-checked claims (hard asserts here, bars in the committed
+BENCH_chaos.json via ``benchmarks.run --check``):
+
+  * **zero token loss / duplication** — every request finishes ``done``
+    and its output equals the oracle's exactly; each handle's visible
+    stream (post crash-restarts) equals its output exactly once.
+  * ``bar_goodput_retention`` — faulted throughput must stay >= 0.7x the
+    fault-free oracle's despite two crash/probation cycles re-running
+    the victims' decodes from scratch.
+  * ``bar_replicas_rejoined`` — a crashed replica must rejoin after
+    probation (warm reset: fresh pool/radix/scheduler) and serve at
+    least one request post-reintegration.
+
+Engines are shared across runs and reset (`ServeEngine.reset`) between
+them — the same warm-reintegration path probation uses, so the bench
+dogfoods recovery twice over.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+
+from benchmarks._util import smoke_requested, write_bench_json
+from repro.chaos import FaultInjector, parse_plan
+from repro.configs import registry
+from repro.gateway.gateway import Gateway
+from repro.models import transformer as T
+from repro.obs import workload as owl
+from repro.obs.flight import FlightRecorder
+from repro.serve.engine import ServeEngine
+
+REPLICAS, SLOTS, CACHE_LEN, BLOCK = 2, 4, 64, 8
+GOODPUT_RETENTION_BAR = 0.7
+CHAOS_SEED = 20
+
+# dispatch indices are small enough that every fault fires even at smoke
+# scale; the pool window opens after replica 0's probation ends so the
+# pressure lands on the *rebuilt* pool, not one a reset is about to void
+PLAN = "crash@d5:r0,slow@d6-14:r1:2ms,crash@d18:r1,pool@s25-60:r0:40"
+PLAN_SMOKE = "crash@d3:r0,slow@d4-8:r1:2ms,crash@d8:r1,pool@s10-24:r0:40"
+
+
+def _workload(smoke: bool, vocab: int) -> owl.WorkloadSpec:
+    # no deadlines: a deadline shed is a *policy* token loss and would
+    # muddy the zero-loss accounting this bench exists to machine-check
+    return owl.WorkloadSpec(
+        seed=11,
+        duration_s=0.9 if smoke else 3.0,
+        base_rate_rps=10.0 if smoke else 14.0,
+        burst_mult=3.0,
+        prompt_len_max=24, output_len_max=10,
+        vocab_size=vocab)
+
+
+def _drive(engines, requests, *, gateway_kwargs=None, plan=None, seed=0,
+           flight_dir=None):
+    """One closed-loop replay over freshly reset engines; returns
+    (gateway, handles, wall_s, injector)."""
+    for eng in engines:
+        eng.reset()
+    gw = Gateway(engines, policy="least-loaded",
+                 flight=(FlightRecorder(flight_dir)
+                         if flight_dir is not None else None),
+                 **(gateway_kwargs or {}))
+    injector = None
+    if plan is not None:
+        injector = FaultInjector(parse_plan(plan, seed=seed)).arm(gw)
+    t0 = time.perf_counter()
+    handles = owl.replay(gw, requests, time_scale=0.0)
+    wall = time.perf_counter() - t0
+    if injector is not None:
+        injector.disarm()
+    if gw.flight is not None:
+        gw.flight.disarm()
+    return gw, handles, wall, injector
+
+
+def run(smoke: bool = False) -> list:
+    smoke = smoke or smoke_requested()
+    cfg = registry.get("qwen3-1.7b", reduced=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    engines = [ServeEngine(params, cfg, batch_slots=SLOTS,
+                           cache_len=CACHE_LEN, kv_layout="paged",
+                           block_size=BLOCK)
+               for _ in range(REPLICAS)]
+    # untimed warmup: pay the jit compiles before anything is measured
+    for eng in engines:
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run()
+
+    requests = owl.generate(_workload(smoke, cfg.vocab_size))
+
+    # ---- fault-free oracle --------------------------------------------
+    _, oracle, wall_oracle, _ = _drive(engines, requests)
+    assert all(h.done for h in oracle), \
+        "oracle run failed without any faults armed"
+    oracle_tokens = sum(len(h.output) for h in oracle)
+
+    # ---- the same trace under the fault schedule ----------------------
+    # poison_threshold=3 is unreachable with 2 replicas: this bench's
+    # schedule can legitimately crash both replicas under one victim
+    # request, and quarantining it would read as token loss against the
+    # oracle (the quarantine path is exercised in tests/test_chaos.py)
+    flight_dir = os.environ.get("REPRO_CHAOS_FLIGHT_DIR")
+    tmp = None
+    if flight_dir is None:
+        tmp = tempfile.TemporaryDirectory()
+        flight_dir = tmp.name
+    gw, handles, wall, inj = _drive(
+        engines, requests,
+        gateway_kwargs=dict(
+            probation_seconds=0.12 if smoke else 0.25,
+            retry_backoff_s=0.01,
+            poison_threshold=3),
+        plan=PLAN_SMOKE if smoke else PLAN, seed=CHAOS_SEED,
+        flight_dir=flight_dir)
+    dumps = len(gw.flight.dumps)
+    if tmp is not None:
+        tmp.cleanup()
+
+    # ---- delivery integrity vs the oracle -----------------------------
+    assert inj.count("crash") == 2, \
+        f"fault schedule misfired: {inj.count('crash')}/2 crashes"
+    not_done = [h.status for h in handles if not h.done]
+    assert not not_done, f"requests lost to faults: {not_done}"
+    lost = dup = 0
+    restarts = 0
+    for h, o in zip(handles, oracle):
+        want, got = o.output, h.output
+        assert got == want, \
+            f"gid {h.gid}: faulted output diverged from oracle " \
+            f"({len(got)} vs {len(want)} tokens)"
+        visible = h.stream.drain()
+        lost += max(0, len(want) - len(visible))
+        dup += max(0, len(visible) - len(want))
+        assert visible == want, \
+            f"gid {h.gid}: visible stream != output (exactly-once broken)"
+        restarts += h.stream.restarts
+    assert restarts > 0, "no stream survived a crash-restart; the " \
+        "schedule should have interrupted in-flight requests"
+
+    # ---- recovery: the crashed replicas rejoined and served -----------
+    rejoined = [r for r in gw.replicas if r.reintegrations > 0]
+    assert rejoined, "no replica was reintegrated after probation"
+    served_after_rejoin = sum(
+        1 for h in handles
+        for r in rejoined
+        if h.metrics.replica_id == r.replica_id
+        and h.metrics.dispatch_t is not None
+        and r.reintegrated_at is not None
+        and h.metrics.dispatch_t >= r.reintegrated_at)
+    assert served_after_rejoin >= 1, \
+        "no request was served by a reintegrated replica"
+
+    # leases and pools must come back clean: no lease left behind, no
+    # lapse was ever *observed* (the pre-dispatch extend heals mid-step
+    # expiry before the queue can redeliver), pool refcounts consistent
+    qstats = gw.queue.stats()
+    assert qstats["leased"] == 0, f"leases left behind: {qstats['leased']}"
+    for eng in engines:
+        eng.manager.pool.check_invariants()
+
+    tokens = sum(len(h.output) for h in handles)
+    retention = (tokens / wall) / (oracle_tokens / wall_oracle)
+    if not smoke and retention < GOODPUT_RETENTION_BAR:
+        raise AssertionError(
+            f"goodput retention under chaos is {retention:.3f} "
+            f"(bar is {GOODPUT_RETENTION_BAR})")
+
+    out = [
+        ("chaos_oracle", wall_oracle / max(oracle_tokens, 1) * 1e6,
+         f"{oracle_tokens / wall_oracle:.1f} tok/s fault-free, "
+         f"{len(oracle)} reqs"),
+        ("chaos_faulted", wall / max(tokens, 1) * 1e6,
+         f"{tokens / wall:.1f} tok/s under 2 crashes + straggler + "
+         f"pool pressure; retention {retention:.2f} "
+         f"(bar >= {GOODPUT_RETENTION_BAR}), "
+         f"{len(rejoined)} rejoined, {served_after_rejoin} served "
+         f"post-rejoin, 0 lost/dup"),
+    ]
+    json_rows = [
+        {"cell": "chaos_oracle", "n_requests": len(oracle),
+         "tokens": oracle_tokens, "wall_s": wall_oracle,
+         "tok_s": oracle_tokens / wall_oracle},
+        {"cell": "chaos_faulted", "n_requests": len(handles),
+         "tokens": tokens, "wall_s": wall, "tok_s": tokens / wall,
+         "goodput_retention": retention,
+         "outputs_match_oracle": True,
+         "lost_tokens": lost, "duplicate_tokens": dup,
+         "stream_restarts": restarts,
+         "replicas_rejoined": len(rejoined),
+         "served_after_rejoin": served_after_rejoin,
+         "crashes_fired": inj.count("crash"),
+         "straggler_dispatches": inj.count("straggler"),
+         "pool_pressure_events": inj.count("pool_pressure"),
+         "requests_retried": gw.metrics.retried,
+         "leases_expired": qstats["expired"],
+         "flightrec_dumps": dumps},
+    ]
+    write_bench_json(
+        "chaos", json_rows,
+        meta={"arch": cfg.arch_id, "replicas": REPLICAS, "slots": SLOTS,
+              "cache_len": CACHE_LEN, "block_size": BLOCK,
+              "workload_seed": 11, "chaos_seed": CHAOS_SEED,
+              "plan": PLAN_SMOKE if smoke else PLAN,
+              "n_requests": len(requests),
+              "bar_goodput_retention": GOODPUT_RETENTION_BAR,
+              "bar_replicas_rejoined": 1,
+              "bar_max_lost_tokens": 0,
+              "bar_max_duplicate_tokens": 0},
+        smoke=smoke)
+    return out

@@ -39,8 +39,8 @@ from typing import Dict, List, Optional
 from benchmarks._util import REPO_ROOT
 
 # benches with a committed BENCH_<name>.json -> benchmarks.run module key
-CHECKED_BENCHES = ("gateway", "kernels", "kvcache", "scheduler", "serving",
-                   "specdec")
+CHECKED_BENCHES = ("chaos", "gateway", "kernels", "kvcache", "scheduler",
+                   "serving", "specdec")
 
 # booleans that must be true in every row carrying them
 _PARITY_PREFIXES = ("outputs_match", "within_bar")
@@ -53,6 +53,7 @@ FRESH_TOLERANCE: Dict[str, float] = {
     "speedup_vs_single": 0.25,
     "stall_cut": 0.25,
     "overhead_frac": 1.0,      # up to 2x the overhead bar at smoke shapes
+    "goodput_retention": 0.5,  # tiny chaos runs amortize probation badly
 }
 DEFAULT_FRESH_TOLERANCE = 0.25
 

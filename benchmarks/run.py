@@ -35,6 +35,7 @@ MODULES = [
     ("kernels", "benchmarks.bench_kernels"),
     ("specdec", "benchmarks.bench_specdec"),
     ("scheduler", "benchmarks.bench_scheduler"),
+    ("chaos", "benchmarks.bench_chaos"),
     ("roofline", "benchmarks.roofline"),
 ]
 

@@ -42,6 +42,7 @@ class TaskQueue:
         self._retries: Dict[str, int] = {}
         self._dead: List[str] = []
         self._acked: set = set()
+        self._expired_count = 0
         self._journal_path = journal_path
         self._journal = None
         if journal_path:
@@ -57,29 +58,40 @@ class TaskQueue:
 
     def _replay(self, path: str):
         with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
+            lines = f.readlines()
+        for i, line in enumerate(lines):
+            line = line.strip()
+            if not line:
+                continue
+            try:
                 rec = json.loads(line)
-                op = rec["op"]
-                if op == "put":
-                    spec = TaskSpec.from_json(rec["task"])
-                    self._tasks[spec.task_id] = spec
-                    heapq.heappush(self._heap,
-                                   (-spec.priority, next(self._seq),
-                                    spec.task_id))
-                elif op == "ack":
-                    self._acked.add(rec["id"])
-                elif op == "nack":
-                    self._retries[rec["id"]] = rec.get("retries", 0)
-                elif op == "dead":
-                    self._dead.append(rec["id"])
+            except json.JSONDecodeError:
+                # a crash mid-write leaves a torn final record; everything
+                # before it is intact, so recover what we have. A torn line
+                # anywhere *else* means real corruption — refuse to guess.
+                if i == len(lines) - 1:
+                    break
+                raise
+            self._apply_replayed(rec)
         # drop completed/dead from pending
         gone = self._acked | set(self._dead)
         self._heap = [h for h in self._heap if h[2] not in gone]
         heapq.heapify(self._heap)
         self._pending_ids = {h[2] for h in self._heap}
+
+    def _apply_replayed(self, rec: dict):
+        op = rec["op"]
+        if op == "put":
+            spec = TaskSpec.from_json(rec["task"])
+            self._tasks[spec.task_id] = spec
+            heapq.heappush(self._heap,
+                           (-spec.priority, next(self._seq), spec.task_id))
+        elif op == "ack":
+            self._acked.add(rec["id"])
+        elif op == "nack":
+            self._retries[rec["id"]] = rec.get("retries", 0)
+        elif op == "dead":
+            self._dead.append(rec["id"])
 
     # ------------------------------------------------------------ api
     def put(self, spec: TaskSpec):
@@ -132,6 +144,21 @@ class TaskQueue:
             # extend records would be O(steps) dead weight in the journal
             self._leased[task_id] = time.time() + seconds
             return True
+
+    def extend_leases(self, task_ids, seconds: float = 300.0) -> int:
+        """Batch heartbeat under one lock acquisition: the gateway extends
+        every in-flight lease immediately before (and after) each engine
+        dispatch, so a dispatch that outlasts `lease_seconds` cannot let the
+        queue re-deliver a request that is still decoding. Returns how many
+        of the ids were actually leased (and therefore extended)."""
+        deadline = time.time() + seconds
+        n = 0
+        with self._lock:
+            for tid in task_ids:
+                if tid in self._leased:
+                    self._leased[tid] = deadline
+                    n += 1
+        return n
 
     def release(self, task_id: str) -> bool:
         """Voluntarily return a leased task to the pending queue *without*
@@ -186,12 +213,31 @@ class TaskQueue:
             self._pending_ids.add(task_id)
             return False
 
+    def bury(self, task_id: str) -> bool:
+        """Administratively dead-letter a task regardless of its retry
+        budget — the gateway's poison quarantine: a request that has killed
+        multiple distinct replicas must never be offered to a consumer
+        again, including across a journal reload (hence the journaled
+        "dead" record). Returns False if the id is unknown or already
+        done/dead."""
+        with self._lock:
+            if task_id not in self._tasks or task_id in self._acked \
+                    or task_id in self._dead:
+                return False
+            self._leased.pop(task_id, None)
+            self._leased_seq.pop(task_id, None)
+            self._pending_ids.discard(task_id)
+            self._dead.append(task_id)
+            self._log("dead", id=task_id)
+            return True
+
     def _expire_locked(self):
         now = time.time()
         expired = [tid for tid, dl in self._leased.items() if dl < now]
         for tid in expired:
             del self._leased[tid]
             self._leased_seq.pop(tid, None)
+            self._expired_count += 1
             spec = self._tasks[tid]
             heapq.heappush(self._heap,
                            (-spec.priority, next(self._seq), tid))
@@ -214,7 +260,8 @@ class TaskQueue:
         with self._lock:
             return {"pending": self._deliverable_locked(),
                     "leased": len(self._leased),
-                    "acked": len(self._acked), "dead": len(self._dead)}
+                    "acked": len(self._acked), "dead": len(self._dead),
+                    "expired": self._expired_count}
 
     def dead_letters(self) -> List[TaskSpec]:
         with self._lock:

@@ -1,5 +1,6 @@
 """Serving gateway: queue-backed routing, sampling, streaming, telemetry."""
-from repro.gateway.gateway import (POLICIES, DispatchPolicy,  # noqa: F401
+from repro.gateway.gateway import (POLICIES, BrownoutConfig,  # noqa: F401
+                                   BrownoutController, DispatchPolicy,
                                    EngineReplica, Gateway, GatewayRequest,
                                    LeastLoaded, PrefixAffinity, RoundRobin)
 from repro.gateway.metrics import GatewayMetrics, RequestMetrics  # noqa: F401

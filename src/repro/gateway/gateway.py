@@ -39,12 +39,19 @@ from repro.serve.engine import Request, ServeEngine
 # --------------------------------------------------------------- replicas
 
 class EngineReplica:
-    """One ServeEngine plus the health/load view the dispatcher needs."""
+    """One ServeEngine plus the health/load view the dispatcher needs,
+    and the lifecycle record the probation/reintegration manager keeps:
+    when it failed, how often, and when it last rejoined the fleet."""
 
     def __init__(self, replica_id: int, engine: ServeEngine):
         self.replica_id = replica_id
         self.engine = engine
         self.healthy = True
+        self.failed_at: Optional[float] = None      # perf_counter of death
+        self.failures = 0
+        self.reintegrations = 0
+        self.reintegrated_at: Optional[float] = None
+        self.last_error: Optional[str] = None
 
     def free_slots(self) -> int:
         return self.engine.free_slots()
@@ -137,6 +144,76 @@ POLICIES: Dict[str, Callable[[], DispatchPolicy]] = {
 }
 
 
+# --------------------------------------------------------------- brownout
+
+@dataclass
+class BrownoutConfig:
+    """Graceful-degradation ladder thresholds. `depth_high` queue depth or
+    any fresh deadline-shed marks a gateway step "hot"; `escalate_steps`
+    consecutive hot steps climb one level, `cool_steps` consecutive calm
+    steps descend one. Levels: 0 normal, 1 shed batch-tier intake
+    (tier >= shed_tier_min rejected 503 "brownout"), 2 additionally run
+    engines degraded (speculation + fused lanes off, chunk budget capped
+    at `chunk_cap`) — premium traffic is the last thing touched."""
+    depth_high: int = 8
+    escalate_steps: int = 3
+    cool_steps: int = 6
+    shed_tier_min: int = 2
+    chunk_cap: int = 8
+
+
+class BrownoutController:
+    """Owns the ladder state machine; `tick()` runs once per gateway step
+    *before* dispatch so a shed decision applies to this step's intake.
+    Every transition lands in the flight recorder."""
+
+    def __init__(self, gateway: "Gateway", cfg: Optional[BrownoutConfig]):
+        self.gw = gateway
+        self.cfg = cfg or BrownoutConfig()
+        self.level = 0
+        self._hot = 0
+        self._cool = 0
+        self._last_sheds = 0
+        self.transitions: List[Tuple[int, int]] = []   # (from, to)
+
+    def tick(self, depth: int):
+        sheds = self.gw._pressure_sheds
+        hot = depth >= self.cfg.depth_high or sheds > self._last_sheds
+        self._last_sheds = sheds
+        if hot:
+            self._hot += 1
+            self._cool = 0
+            if self._hot >= self.cfg.escalate_steps and self.level < 2:
+                self._set_level(self.level + 1, depth)
+                self._hot = 0
+        else:
+            self._cool += 1
+            self._hot = 0
+            if self._cool >= self.cfg.cool_steps and self.level > 0:
+                self._set_level(self.level - 1, depth)
+                self._cool = 0
+
+    def _set_level(self, level: int, depth: int):
+        prev, self.level = self.level, level
+        self.transitions.append((prev, level))
+        degraded = level >= 2
+        for r in self.gw.replicas:
+            if getattr(r.engine, "degraded", False) != degraded:
+                r.engine.set_degraded(degraded,
+                                      chunk_cap=self.cfg.chunk_cap)
+        flight = self.gw.flight
+        if flight is not None and hasattr(flight, "note"):
+            flight.note("brownout", level=level, prev=prev, depth=depth,
+                        dump=(level == 0 and prev > 0))
+
+    def should_shed(self, tier: int) -> bool:
+        return self.level >= 1 and tier >= self.cfg.shed_tier_min
+
+    def stats(self) -> dict:
+        return {"level": self.level, "transitions": len(self.transitions),
+                "shed_tier_min": self.cfg.shed_tier_min}
+
+
 # --------------------------------------------------------------- requests
 
 @dataclass
@@ -191,6 +268,10 @@ class Gateway:
                  lease_seconds: float = 30.0,
                  max_retries: int = 2,
                  admit_budget: Optional[int] = None,
+                 probation_seconds: Optional[float] = None,
+                 retry_backoff_s: float = 0.0,
+                 poison_threshold: int = 2,
+                 brownout: Optional[BrownoutConfig] = None,
                  slo=None, flight=None):
         """admit_budget enables admission control *by token budget* rather
         than slot count: a request's demand is prompt_len + max_new_tokens,
@@ -201,7 +282,20 @@ class Gateway:
         replica has enough free KV blocks for it. With admit_budget=None,
         paged replicas still gate dispatch on their free-block capacity
         (they cannot ring-wrap like the dense layout), but nothing is
-        rejected up front."""
+        rejected up front.
+
+        Lifecycle knobs (all opt-in; defaults preserve the historical
+        "unhealthy forever" behavior):
+          * probation_seconds — a failed replica rejoins after this long,
+            warm-reset (fresh KV pool/radix/scheduler, empty slots).
+          * retry_backoff_s   — base of the per-request exponential retry
+            backoff (delay = base * 2**(retries-1)) after a replica crash.
+          * poison_threshold  — a request that has killed this many
+            *distinct* replicas is buried as failed(poison) instead of
+            being offered to the next victim (0/None disables).
+          * brownout          — a BrownoutConfig arming the graceful-
+            degradation ladder (shed batch tier, then degrade engines,
+            before premium traffic is ever touched)."""
         if not engines:
             raise ValueError("Gateway needs at least one engine replica")
         self.admit_budget = admit_budget
@@ -227,7 +321,16 @@ class Gateway:
         self._by_task: Dict[str, GatewayRequest] = {}
         # task_id -> (gwreq, replica) for everything leased from the queue
         self._inflight: Dict[str, Tuple[GatewayRequest, EngineReplica]] = {}
-        self._last_heartbeat = 0.0
+        # --- replica lifecycle / retry state ---
+        self.probation_seconds = probation_seconds
+        self.retry_backoff_s = retry_backoff_s
+        self.poison_threshold = poison_threshold
+        self._victims: Dict[str, set] = {}      # task_id -> replica_ids killed
+        self._backoff_n: Dict[str, int] = {}    # task_id -> crash-retry count
+        self._retry_at: Dict[str, float] = {}   # task_id -> earliest redispatch
+        self._pressure_sheds = 0                # deadline sheds, brownout input
+        self.brownout = (BrownoutController(self, brownout)
+                         if brownout is not None else None)
         # tasks already marked failed by _abort_queued; their leases expire
         # and redeliver (they are deliberately never acked), so remember
         # them or each expiry would re-fail / re-adopt the same task
@@ -245,6 +348,8 @@ class Gateway:
         self.registry.register_scope("speculation", self.spec_summary)
         self.registry.register_scope("engine_steps", self.engine_step_summary)
         self.registry.register_scope("trace", self._trace_summary)
+        if self.brownout is not None:
+            self.registry.register_scope("brownout", self.brownout.stats)
         # SLO tracker / flight recorder: lifecycle observers with registry
         # scopes, attachable at construction or later (set_slo /
         # arm_flight_recorder) — `slo` may also be a {tier: SLOSpec} dict
@@ -404,6 +509,18 @@ class Gateway:
             self._dispatch_ready_impl()
 
     def _dispatch_ready_impl(self):
+        # tasks inside their post-crash backoff window are held *leased*
+        # for the duration of this loop (a release would put them straight
+        # back at the heap head and get() would hand them out again — an
+        # infinite loop), then returned to the queue on the way out
+        deferred: List[str] = []
+        try:
+            self._dispatch_loop(deferred)
+        finally:
+            for tid in deferred:
+                self.queue.release(tid)
+
+    def _dispatch_loop(self, deferred: List[str]):
         while True:
             eligible = self._eligible()
             if not eligible:
@@ -422,8 +539,22 @@ class Gateway:
                 gwreq = self._adopt(spec)
             if gwreq.deadline is not None and \
                     time.perf_counter() > gwreq.deadline:
+                self._pressure_sheds += 1
                 self._reject(gwreq, spec.task_id)
                 continue
+            if self.brownout is not None and \
+                    self.brownout.should_shed(gwreq.tier):
+                # brownout ladder level >= 1: batch-tier intake is shed
+                # with an explicit 503 so clients can back off and retry
+                self._reject(gwreq, spec.task_id,
+                             reason="brownout", code=503)
+                continue
+            retry_at = self._retry_at.get(spec.task_id)
+            if retry_at is not None:
+                if time.perf_counter() < retry_at:
+                    deferred.append(spec.task_id)
+                    continue
+                del self._retry_at[spec.task_id]
             need = self._demand(gwreq)
             if self._over_capacity(need):       # adopted/journal-replayed
                 self._reject(gwreq, spec.task_id,
@@ -483,6 +614,7 @@ class Gateway:
         control ruled the request un-servable (429). Dropped before burning
         decode compute (an ack removes it; the journal keeps the record)."""
         self.queue.ack(task_id)
+        self._forget_retry_state(task_id)
         gwreq.stream.finish(reason=reason, code=code)
         self.metrics.reject(gwreq.gid, reason=reason)
 
@@ -507,6 +639,7 @@ class Gateway:
                 return
             self.queue.ack(gwreq.task_id)
             self._inflight.pop(gwreq.task_id, None)
+            self._forget_retry_state(gwreq.task_id)
             if req.error is not None:
                 # request-scoped failure (e.g. sampling blew up on NaN
                 # logits): deterministic, so retry is pointless — ack and
@@ -522,10 +655,17 @@ class Gateway:
 
     # ------------------------------------------------------------- failure
     def _fail_replica(self, replica: EngineReplica, err: Exception):
-        """Dispensable-worker semantics: mark the replica unhealthy and nack
-        its leased requests so the queue re-delivers them (to other
-        replicas) or dead-letters after max_retries."""
+        """Dispensable-worker semantics: mark the replica unhealthy (with
+        probation enabled it rejoins warm-reset after `probation_seconds`)
+        and nack its leased requests so the queue re-delivers them (to
+        other replicas, after their backoff window) or dead-letters after
+        max_retries. A request that has now killed `poison_threshold`
+        distinct replicas is buried instead of requeued — one poison
+        request must not assassinate the fleet serially."""
         replica.healthy = False
+        replica.failed_at = time.perf_counter()
+        replica.failures += 1
+        replica.last_error = repr(err)
         if self.flight is not None:
             self.flight.note_replica_failure(replica.replica_id, repr(err))
         victims = [(tid, gwreq) for tid, (gwreq, r) in self._inflight.items()
@@ -534,13 +674,69 @@ class Gateway:
             del self._inflight[tid]
             replica.engine.evict(gwreq.engine_req)
             gwreq.engine_req = None
-            gwreq.stream.reset()
+            gwreq.stream.restart()
+            killed = self._victims.setdefault(tid, set())
+            killed.add(replica.replica_id)
+            if self.poison_threshold and len(killed) >= self.poison_threshold:
+                self.queue.bury(tid)
+                self._forget_retry_state(tid)
+                gwreq.stream.finish(reason="poison")
+                self.metrics.reject(gwreq.gid, status="failed",
+                                    reason="poison")
+                if self.flight is not None and hasattr(self.flight, "note"):
+                    self.flight.note("poison_quarantine", task_id=tid,
+                                     replicas=sorted(killed), dump=True)
+                continue
             if self.queue.nack(tid):            # retries exhausted
+                self._forget_retry_state(tid)
                 gwreq.stream.finish()
                 self.metrics.reject(gwreq.gid, status="failed",
                                     reason="retries_exhausted")
             else:
+                if self.retry_backoff_s > 0:
+                    n = self._backoff_n[tid] = self._backoff_n.get(tid, 0) + 1
+                    self._retry_at[tid] = (time.perf_counter()
+                                           + self.retry_backoff_s
+                                           * 2 ** (n - 1))
                 self.metrics.requeue(gwreq.gid)
+
+    def _forget_retry_state(self, task_id: str):
+        self._victims.pop(task_id, None)
+        self._backoff_n.pop(task_id, None)
+        self._retry_at.pop(task_id, None)
+
+    # ---------------------------------------------------- replica lifecycle
+    def _recovery_pending(self) -> bool:
+        """True when a dead replica will rejoin on its own — i.e. probation
+        is enabled and someone is serving it. Gates the total-outage abort:
+        queued work should wait out a probation window, not be failed."""
+        return self.probation_seconds is not None and any(
+            not r.healthy and r.failed_at is not None for r in self.replicas)
+
+    def _maybe_reintegrate(self):
+        if self.probation_seconds is None:
+            return
+        now = time.perf_counter()
+        for r in self.replicas:
+            if not r.healthy and r.failed_at is not None and \
+                    now - r.failed_at >= self.probation_seconds:
+                self._reintegrate(r)
+
+    def _reintegrate(self, replica: EngineReplica):
+        """Warm reintegration after probation: the engine is rebuilt from
+        scratch — fresh KV pool + radix index + scheduler, every slot
+        empty — because the crash left its device state unaccounted for.
+        Prefix-affinity needs no explicit flush: placement probes the
+        (now empty) radix index, so stale affinity can't route here."""
+        replica.engine.reset()
+        replica.healthy = True
+        replica.failed_at = None
+        replica.reintegrations += 1
+        replica.reintegrated_at = time.perf_counter()
+        if self.flight is not None and hasattr(self.flight, "note"):
+            self.flight.note("replica_reintegrated",
+                             replica=replica.replica_id,
+                             failures=replica.failures)
 
     def _abort_queued(self):
         """No healthy replica remains: mark everything still waiting as
@@ -563,29 +759,45 @@ class Gateway:
 
     # ---------------------------------------------------------------- run
     def step(self) -> int:
-        """Dispatch ready work, decode one lockstep token on every healthy
-        replica, heartbeat leases, sample gauges. Returns the number of
-        requests still live (active anywhere + waiting in the queue)."""
+        """Reintegrate probationed replicas, tick the brownout ladder,
+        dispatch ready work, decode one lockstep token on every healthy
+        replica (extending its leases immediately before the dispatch),
+        sample gauges. Returns the number of requests still live (active
+        anywhere + waiting in the queue)."""
+        self._maybe_reintegrate()
+        if self.brownout is not None:
+            self.brownout.tick(self.queue.depth())
         self._dispatch_ready()
         active = 0
         for replica in self.replicas:
             if not replica.healthy or not replica.engine.has_work():
                 continue
+            # extend THIS replica's leases right before its dispatch: a
+            # fused/spec/mixed step (or a first-step jit compile) can
+            # outlast lease_seconds, and a between-steps heartbeat would
+            # let the queue redeliver a request that is still decoding
+            mine = [tid for tid, (_, r) in self._inflight.items()
+                    if r is replica]
+            if mine:
+                self.queue.extend_leases(mine, self.lease_seconds)
             try:
                 active += replica.engine.step()
             except Exception as err:        # noqa: BLE001 — fail forward
                 self._fail_replica(replica, err)
-        # heartbeat leases at lease_seconds/4 cadence, not every token —
-        # extend_lease takes the queue lock per call
-        now = time.perf_counter()
-        if self._inflight and \
-                now - self._last_heartbeat >= self.lease_seconds / 4:
-            self._last_heartbeat = now
-            for task_id in list(self._inflight):
-                self.queue.extend_lease(task_id, self.lease_seconds)
+        # re-extend everything still leased after the dispatches: lease
+        # expiry is lazy (materialized only inside queue.get()), so healing
+        # deadlines here — before any next get() can run — means a lease
+        # that lapsed *during* a long dispatch is never observed as expired
+        if self._inflight:
+            self.queue.extend_leases(list(self._inflight), self.lease_seconds)
         depth = self.queue.depth()
         self.metrics.record_gauges(depth, active)
         if not any(r.healthy for r in self.replicas):
+            if self._recovery_pending():
+                # capacity returns by itself after probation; don't fail
+                # queued work, just don't hot-spin while waiting
+                time.sleep(min(0.001, self.probation_seconds))
+                return len(self._inflight) + depth
             self._abort_queued()
             return 0
         # _inflight already covers every placed request (decoding or

@@ -8,9 +8,15 @@ invokes its `pump` (the gateway's `step`) to advance the engines until a new
 token lands or the request finishes — so `for tok in req.stream:` observes
 tokens as they decode rather than after `run()` returns.
 
-Delivery matches the queue tier's at-least-once semantics: if a replica
-fails mid-decode and the request is re-leased elsewhere, the stream is reset
-and the retry re-emits from the start of the output.
+Delivery across failures is *exactly-once at the consumer's cursor*: when a
+replica dies mid-decode and the request is re-leased, the retry restarts
+generation from token 0, but the stream records how many tokens the consumer
+has already seen (`delivered`) and swallows that many replayed tokens before
+making new ones visible. The consumer observes an explicit `restarted` event
+in `stream.events` and then a seamless continuation — never a duplicated
+prefix. This requires the retry to regenerate the same prefix, which holds
+for greedy decoding and for seeded per-request sampling (both true here);
+a nondeterministic sampler would make the post-restart suffix diverge.
 """
 from __future__ import annotations
 
@@ -31,11 +37,25 @@ class TokenStream:
         # HTTP-shaped signal a frontend would surface as Too Many Requests
         self.finish_reason: Optional[str] = None
         self.status_code: Optional[int] = None
+        # restart bookkeeping: tokens the consumer has provably seen via
+        # each path, replayed tokens still to swallow, and the event log
+        # ("restarted" markers) a consumer can inspect mid-iteration
+        self._cb_seen = 0
+        self._popped = 0
+        self._replay_skip = 0
+        self.restarts = 0
+        self.events: List[dict] = []
 
     # ------------------------------------------------------- producer side
     def push(self, tok: int):
+        if self._replay_skip > 0:
+            # a post-restart retry re-emits from token 0; this prefix was
+            # already delivered before the failure — swallow it
+            self._replay_skip -= 1
+            return
         self._buf.append(tok)
         if self._cb:
+            self._cb_seen += 1
             try:
                 self._cb(tok)
             except Exception as err:  # noqa: BLE001
@@ -56,12 +76,30 @@ class TokenStream:
             self.status_code = code
         self._done = True
 
-    def reset(self):
-        """Replica-failure retry: drop buffered-but-unread tokens; the
-        re-dispatched request will re-emit its stream from the start."""
+    def restart(self):
+        """Replica-failure retry: drop buffered-but-unread tokens (the
+        consumer never saw them; the retry will regenerate them), arm the
+        replay cursor to swallow the `delivered` prefix the consumer DID
+        see, and log an explicit `restarted` event."""
         self._buf.clear()
+        self._replay_skip = self.delivered
+        self.restarts += 1
+        self.events.append({"event": "restarted",
+                            "visible_tokens": self.delivered})
+
+    # legacy name; same semantics (pre-restart callers expected "re-emit
+    # from the start", which silently duplicated the delivered prefix)
+    reset = restart
 
     # ------------------------------------------------------- consumer side
+    @property
+    def delivered(self) -> int:
+        """Tokens the consumer has visibly received. With a callback armed
+        the callback is the visibility cursor; otherwise the iterator/drain
+        cursor is. (Consuming through BOTH is ambiguous — the larger cursor
+        wins, so replay never duplicates for the faster consumer.)"""
+        return max(self._cb_seen, self._popped)
+
     @property
     def finished(self) -> bool:
         return self._done and not self._buf
@@ -70,6 +108,7 @@ class TokenStream:
         """Non-blocking: all tokens buffered so far."""
         out = list(self._buf)
         self._buf.clear()
+        self._popped += len(out)
         return out
 
     def __iter__(self):
@@ -85,4 +124,5 @@ class TokenStream:
                 raise RuntimeError(
                     "TokenStream stalled: gateway made no progress but the "
                     "request is not finished (rejected/dead-lettered?)")
+        self._popped += 1
         return self._buf.popleft()

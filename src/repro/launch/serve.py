@@ -12,7 +12,7 @@ import jax
 
 from repro.configs import registry
 from repro.core import reporting
-from repro.gateway.gateway import POLICIES, Gateway
+from repro.gateway.gateway import POLICIES, BrownoutConfig, Gateway
 from repro.gateway.sampler import SamplingParams
 from repro.models import transformer as T
 from repro.obs import trace as otrace
@@ -164,6 +164,28 @@ def main():
                     "breach, illegal lifecycle transition, replica failure "
                     "or shed spike, dump the span+lifecycle evidence rings "
                     "to DIR/flightrec-*.json (default ./flightrec)")
+    ap.add_argument("--probation", type=float, default=None,
+                    metavar="SECONDS",
+                    help="replica lifecycle recovery: a crashed replica "
+                    "rejoins the fleet warm-reset after this probation "
+                    "window (default: unhealthy forever)")
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    metavar="SECONDS",
+                    help="base of the per-request exponential backoff "
+                    "between crash retries (delay = base * 2**(n-1))")
+    ap.add_argument("--brownout", action="store_true",
+                    help="arm the graceful-degradation ladder: under "
+                    "sustained pressure shed batch-tier intake (503), "
+                    "then park the spec/fused fast lanes and cap prefill "
+                    "chunks, before premium traffic is ever rejected")
+    ap.add_argument("--chaos", default=None, metavar="PLAN",
+                    help="arm a deterministic fault schedule against the "
+                    "run, e.g. 'crash@d6:r0,straggler@d4-12:r1:2ms,"
+                    "pool@s8-40:r0:4,expire@s10' (kinds: crash, "
+                    "straggler/slow, pool, nan, expire; d = replica "
+                    "dispatch index, s = gateway step index)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="seed resolving unpinned fault targets in --chaos")
     args = ap.parse_args()
 
     if args.trace:
@@ -189,7 +211,18 @@ def main():
                        scheduler=args.scheduler,
                        chunk_budget=args.chunk_budget,
                        admit_budget=args.admit_budget,
+                       probation_seconds=args.probation,
+                       retry_backoff_s=args.retry_backoff,
+                       brownout=(BrownoutConfig() if args.brownout
+                                 else None),
                        slo=slo_tiers, flight=args.flight_recorder)
+    injector = None
+    if args.chaos:
+        from repro.chaos import FaultInjector, parse_plan
+        plan = parse_plan(args.chaos, seed=args.chaos_seed)
+        injector = FaultInjector(plan).arm(gw)
+        print(f"[serve] chaos armed: {len(plan.faults)} fault(s), "
+              f"seed={plan.seed}")
     try:
         done, dt = _drive(gw, cfg, args)
     except BaseException as err:
@@ -208,6 +241,12 @@ def main():
                 print(f"[serve] trace: {tr.recorded} spans recorded "
                       f"({tr.dropped} dropped) -> {path} "
                       f"(load in https://ui.perfetto.dev)")
+        if injector is not None:
+            injector.disarm()
+            by_kind = {}
+            for e in injector.fired:
+                by_kind[e["fault"]] = by_kind.get(e["fault"], 0) + 1
+            print(f"[serve] chaos fired: {by_kind or 'nothing'}")
         if gw.flight is not None:
             fl = gw.flight.stats()
             if fl["dumps"]:

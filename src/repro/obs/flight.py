@@ -127,6 +127,19 @@ class FlightRecorder:
                             "replica_id": replica_id, "error": error})
         self.trigger("replica_failure", replica_id=replica_id, error=error)
 
+    def note(self, kind: str, *, dump: bool = False, **ctx):
+        """Generic evidence event from outside the request lifecycle —
+        brownout transitions, replica reintegration, poison quarantine,
+        injected chaos faults. Rides the same ring as lifecycle events
+        (host track in the Perfetto dump); `dump=True` also fires a
+        trigger so the episode leaves a post-mortem file."""
+        if not self.armed:
+            return
+        self.events.append({"t": now(), "kind": kind, **ctx})
+        if dump:
+            self.trigger(kind, **{k: v for k, v in ctx.items()
+                                  if isinstance(v, (str, int, float, bool))})
+
     # ------------------------------------------------------------- dumping
     def trigger(self, reason: str, *, request: Optional[RequestMetrics] = None,
                 **ctx) -> Optional[Path]:
@@ -178,9 +191,17 @@ class FlightRecorder:
                             "args": {"error": e.get("error", "")}})
                 continue
             args = {k: v for k, v in e.items() if k not in ("t", "kind")}
+            rid = e.get("request_id")
+            if rid is None:
+                # request-less generic events (brownout, reintegration,
+                # chaos faults) land on the host track
+                out.append({"ph": "i", "name": e["kind"], "cat": "lifecycle",
+                            "ts": ts, "pid": otrace.HOST_PID, "tid": 0,
+                            "s": "p", "args": args})
+                continue
             out.append({"ph": "i", "name": e["kind"], "cat": "lifecycle",
                         "ts": ts, "pid": otrace.REQUEST_PID,
-                        "tid": e["request_id"], "s": "t", "args": args})
+                        "tid": rid, "s": "t", "args": args})
         return out
 
     # ------------------------------------------------------------- scope

@@ -94,7 +94,7 @@ def save_slos(path, tiers: Dict[int, SLOSpec]) -> Path:
 
 class _TierStats:
     __slots__ = ("finished", "met", "breached", "breaches_by_target",
-                 "shed_deadline", "shed_capacity", "failed",
+                 "shed_deadline", "shed_capacity", "shed_brownout", "failed",
                  "tokens", "tokens_met")
 
     def __init__(self):
@@ -104,13 +104,14 @@ class _TierStats:
         self.breaches_by_target: Dict[str, int] = {}
         self.shed_deadline = 0      # deadline-based shedding
         self.shed_capacity = 0      # admission-control 429s
+        self.shed_brownout = 0      # graceful-degradation 503s
         self.failed = 0
         self.tokens = 0
         self.tokens_met = 0         # tokens from SLO-met requests = goodput
 
     def as_dict(self) -> dict:
-        submitted = (self.finished + self.shed_deadline
-                     + self.shed_capacity + self.failed)
+        submitted = (self.finished + self.shed_deadline + self.shed_capacity
+                     + self.shed_brownout + self.failed)
         return {
             "submitted": submitted,
             "finished": self.finished,
@@ -121,6 +122,7 @@ class _TierStats:
             "breaches_by_target": dict(self.breaches_by_target),
             "shed_deadline": self.shed_deadline,
             "shed_capacity_429": self.shed_capacity,
+            "shed_brownout_503": self.shed_brownout,
             "failed": self.failed,
             "tokens": self.tokens,
             "tokens_met": self.tokens_met,
@@ -193,6 +195,11 @@ class SLOTracker:
                     s.failed += 1
                 elif m.finish_reason == "over_capacity":
                     s.shed_capacity += 1
+                elif m.finish_reason == "brownout":
+                    # shed by the graceful-degradation ladder, not by
+                    # deadline: a capacity decision the operator made, so
+                    # it must not read as a latency failure
+                    s.shed_brownout += 1
                 else:               # deadline expiry and queue aborts
                     s.shed_deadline += 1
 

@@ -194,6 +194,9 @@ class ServeEngine:
         self.decode_kernel = decode_kernel
         self.fused_tokens = int(fused_tokens)
         self.spec_tokens = int(spec_tokens)
+        # brownout lever (set_degraded): parks the spec/fused fast lanes
+        # and caps chunked-prefill chunks without touching any jit shape
+        self.degraded = False
         self.drafter = make_drafter(drafter) if spec_tokens > 0 else None
         self._decode_fused = None
         self._decode_spec = None
@@ -356,6 +359,48 @@ class ServeEngine:
     def cache_metrics(self):
         """kvcache.CacheMetrics for the paged layout, else None."""
         return self.manager.metrics if self.manager is not None else None
+
+    # ---------------------------------------------------------- lifecycle
+    def reset(self):
+        """Warm rebuild for replica reintegration after a crash: device
+        cache re-initialized, fresh KV pool + radix index, every slot and
+        block table empty, the chunked scheduler re-created. The jitted
+        dispatch functions are deliberately KEPT — state is what a crash
+        corrupts; recompiling would pay first-step latency all over."""
+        if self.kv_layout == "paged":
+            pool_blocks = self.manager.pool.n_blocks
+            self.cache = T.init_paged_cache(self.cfg, pool_blocks,
+                                            self.block_size)
+            self.manager = KVCacheManager(pool_blocks, self.block_size)
+            self.table = np.zeros_like(self.table)
+            self._slot_blocks = [[] for _ in range(self.slots)]
+        else:
+            self.cache = T.init_cache(self.cfg, self.slots, self.cache_len)
+        self.pos = np.full((self.slots,), -1, np.int64)
+        self.budget = np.zeros((self.slots,), np.int64)
+        self.active = [None] * self.slots
+        self._pending = []
+        self._finished = []
+        self.prefill_tokens_computed = 0
+        if self.scheduler is not None:
+            fresh = ChunkedScheduler(self.scheduler.chunk_budget)
+            fresh._cap = self.scheduler._cap     # keep brownout throttle
+            self.scheduler = fresh
+        if self.drafter is not None and hasattr(self.drafter, "_streams"):
+            # draft-model incremental KV is keyed by request identity;
+            # stale streams from the crashed run must not seed retries
+            self.drafter._streams.clear()
+
+    def set_degraded(self, on: bool, *, chunk_cap: int = 8):
+        """Brownout level-2 lever: park the speculative and fused fast
+        lanes (their long bursts monopolize the lockstep batch under
+        pressure) and cap chunked-prefill chunks at `chunk_cap` tokens.
+        Shape-safe by construction: lanes are *skipped*, not rebuilt, and
+        the chunk cap shortens the token run inside the fixed-width padded
+        operand — nothing retraces."""
+        self.degraded = bool(on)
+        if self.scheduler is not None:
+            self.scheduler.throttle(chunk_cap if on else None)
 
     # ------------------------------------------------------------- internals
     def _observe_step(self, kind: str, t0: float):
@@ -647,9 +692,11 @@ class ServeEngine:
             toks[s, 0] = self.active[s].output[-1]
         pos = np.maximum(self.pos + 1, 0).astype(np.int32)
         greedy_batch = all(self.active[s].sampling.is_greedy for s in live)
-        if self._decode_spec is not None and greedy_batch:
+        if self._decode_spec is not None and greedy_batch \
+                and not self.degraded:
             return self._step_spec(live, toks, pos)
         if self._decode_fused is not None and greedy_batch and \
+                not self.degraded and \
                 2 * max(self.budget[s] for s in live) > self.fused_tokens:
             # request endgame guard: the scan always runs fused_tokens full
             # forwards, so once every live slot would go dead within the

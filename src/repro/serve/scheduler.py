@@ -57,6 +57,12 @@ class ChunkedScheduler:
         if chunk_budget < 1:
             raise ValueError(f"chunk_budget must be >= 1, got {chunk_budget}")
         self.chunk_budget = int(chunk_budget)
+        # brownout throttle: a cap BELOW chunk_budget on how many tokens a
+        # chunk carries. Separate from chunk_budget on purpose — the jitted
+        # mixed step pads its chunk operand to chunk_budget width, so the
+        # budget itself must never change post-construction (it would
+        # retrace); the cap only shortens the real token run inside it
+        self._cap: Optional[int] = None
         # slot -> prompt tokens already resident (reused prefix + chunks)
         self._cursor: Dict[int, int] = {}
         self._fifo: List[int] = []          # prefilling slots, FCFS order
@@ -82,6 +88,12 @@ class ChunkedScheduler:
             del self._cursor[slot]
             self._fifo.remove(slot)
 
+    def throttle(self, cap: Optional[int]):
+        """Set (or clear, with None) the brownout chunk cap. Clamped to
+        [1, chunk_budget]."""
+        self._cap = None if cap is None else max(1, min(int(cap),
+                                                        self.chunk_budget))
+
     # ------------------------------------------------------------- planning
     def prefilling(self, slot: int) -> bool:
         return slot in self._cursor
@@ -101,7 +113,8 @@ class ChunkedScheduler:
         slot = self._fifo[0]
         prompt = prompts[slot]
         cur = self._cursor[slot]
-        n = min(self.chunk_budget, len(prompt) - cur)
+        budget = self.chunk_budget if self._cap is None else self._cap
+        n = min(budget, len(prompt) - cur)
         return ChunkPlan(slot=slot, start=cur, tokens=list(prompt[cur:cur + n]),
                          completes=cur + n >= len(prompt))
 
@@ -125,6 +138,7 @@ class ChunkedScheduler:
         return {
             "scheduler": self.name,
             "chunk_budget": self.chunk_budget,
+            "chunk_cap": self._cap,
             "mixed_dispatches": self.mixed_dispatches,
             "chunks_dispatched": self.chunks_dispatched,
             "prefill_tokens_chunked": self.prefill_tokens_chunked,
