@@ -51,6 +51,11 @@ CHAOS_SEED = 20
 # pressure lands on the *rebuilt* pool, not one a reset is about to void
 PLAN = "crash@d5:r0,slow@d6-14:r1:2ms,crash@d18:r1,pool@s25-60:r0:40"
 PLAN_SMOKE = "crash@d3:r0,slow@d4-8:r1:2ms,crash@d8:r1,pool@s10-24:r0:40"
+# async-worker variant: same crash/straggler schedule minus the pool
+# window (the injector rejects pool_pressure under async workers — it
+# would mutate an engine's BlockPool from outside its owner thread)
+PLAN_ASYNC = "crash@d5:r0,slow@d6-14:r1:2ms,crash@d18:r1"
+PLAN_ASYNC_SMOKE = "crash@d3:r0,slow@d4-8:r1:2ms,crash@d8:r1"
 
 
 def _workload(smoke: bool, vocab: int) -> owl.WorkloadSpec:
@@ -81,11 +86,67 @@ def _drive(engines, requests, *, gateway_kwargs=None, plan=None, seed=0,
     t0 = time.perf_counter()
     handles = owl.replay(gw, requests, time_scale=0.0)
     wall = time.perf_counter() - t0
+    gw.shutdown()
     if injector is not None:
         injector.disarm()
     if gw.flight is not None:
         gw.flight.disarm()
     return gw, handles, wall, injector
+
+
+def _verify_integrity(gw, handles, oracle, inj, engines) -> dict:
+    """The chaos contract, shared by the sync and async faulted runs:
+    both crashes fired, zero token loss/duplication vs the oracle,
+    exactly-once visible streams across restarts, crashed replicas
+    rejoined and served, no lease left behind, pool refcounts clean."""
+    assert inj.count("crash") == 2, \
+        f"fault schedule misfired: {inj.count('crash')}/2 crashes"
+    not_done = [h.status for h in handles if not h.done]
+    assert not not_done, f"requests lost to faults: {not_done}"
+    lost = dup = restarts = 0
+    for h, o in zip(handles, oracle):
+        want, got = o.output, h.output
+        assert got == want, \
+            f"gid {h.gid}: faulted output diverged from oracle " \
+            f"({len(got)} vs {len(want)} tokens)"
+        visible = h.stream.drain()
+        lost += max(0, len(want) - len(visible))
+        dup += max(0, len(visible) - len(want))
+        assert visible == want, \
+            f"gid {h.gid}: visible stream != output (exactly-once broken)"
+        restarts += h.stream.restarts
+    assert restarts > 0, "no stream survived a crash-restart; the " \
+        "schedule should have interrupted in-flight requests"
+
+    # recovery: the crashed replicas rejoined and served
+    rejoined = [r for r in gw.replicas if r.reintegrations > 0]
+    assert rejoined, "no replica was reintegrated after probation"
+    served_after_rejoin = sum(
+        1 for h in handles
+        for r in rejoined
+        if h.metrics.replica_id == r.replica_id
+        and h.metrics.dispatch_t is not None
+        and r.reintegrated_at is not None
+        and h.metrics.dispatch_t >= r.reintegrated_at)
+    assert served_after_rejoin >= 1, \
+        "no request was served by a reintegrated replica"
+
+    # leases and pools must come back clean: no lease left behind, no
+    # lapse was ever *observed* (the pre-dispatch extend heals mid-step
+    # expiry before the queue can redeliver), pool refcounts consistent
+    qstats = gw.queue.stats()
+    assert qstats["leased"] == 0, f"leases left behind: {qstats['leased']}"
+    for eng in engines:
+        eng.manager.pool.check_invariants()
+    return {"lost_tokens": lost, "duplicate_tokens": dup,
+            "stream_restarts": restarts,
+            "replicas_rejoined": len(rejoined),
+            "served_after_rejoin": served_after_rejoin,
+            "crashes_fired": inj.count("crash"),
+            "straggler_dispatches": inj.count("straggler"),
+            "pool_pressure_events": inj.count("pool_pressure"),
+            "requests_retried": gw.metrics.retried,
+            "leases_expired": qstats["expired"]}
 
 
 def run(smoke: bool = False) -> list:
@@ -128,56 +189,37 @@ def run(smoke: bool = False) -> list:
         plan=PLAN_SMOKE if smoke else PLAN, seed=CHAOS_SEED,
         flight_dir=flight_dir)
     dumps = len(gw.flight.dumps)
-    if tmp is not None:
-        tmp.cleanup()
 
-    # ---- delivery integrity vs the oracle -----------------------------
-    assert inj.count("crash") == 2, \
-        f"fault schedule misfired: {inj.count('crash')}/2 crashes"
-    not_done = [h.status for h in handles if not h.done]
-    assert not not_done, f"requests lost to faults: {not_done}"
-    lost = dup = 0
-    restarts = 0
-    for h, o in zip(handles, oracle):
-        want, got = o.output, h.output
-        assert got == want, \
-            f"gid {h.gid}: faulted output diverged from oracle " \
-            f"({len(got)} vs {len(want)} tokens)"
-        visible = h.stream.drain()
-        lost += max(0, len(want) - len(visible))
-        dup += max(0, len(visible) - len(want))
-        assert visible == want, \
-            f"gid {h.gid}: visible stream != output (exactly-once broken)"
-        restarts += h.stream.restarts
-    assert restarts > 0, "no stream survived a crash-restart; the " \
-        "schedule should have interrupted in-flight requests"
-
-    # ---- recovery: the crashed replicas rejoined and served -----------
-    rejoined = [r for r in gw.replicas if r.reintegrations > 0]
-    assert rejoined, "no replica was reintegrated after probation"
-    served_after_rejoin = sum(
-        1 for h in handles
-        for r in rejoined
-        if h.metrics.replica_id == r.replica_id
-        and h.metrics.dispatch_t is not None
-        and r.reintegrated_at is not None
-        and h.metrics.dispatch_t >= r.reintegrated_at)
-    assert served_after_rejoin >= 1, \
-        "no request was served by a reintegrated replica"
-
-    # leases and pools must come back clean: no lease left behind, no
-    # lapse was ever *observed* (the pre-dispatch extend heals mid-step
-    # expiry before the queue can redeliver), pool refcounts consistent
-    qstats = gw.queue.stats()
-    assert qstats["leased"] == 0, f"leases left behind: {qstats['leased']}"
-    for eng in engines:
-        eng.manager.pool.check_invariants()
-
+    st = _verify_integrity(gw, handles, oracle, inj, engines)
     tokens = sum(len(h.output) for h in handles)
     retention = (tokens / wall) / (oracle_tokens / wall_oracle)
     if not smoke and retention < GOODPUT_RETENTION_BAR:
         raise AssertionError(
             f"goodput retention under chaos is {retention:.3f} "
+            f"(bar is {GOODPUT_RETENTION_BAR})")
+
+    # ---- the same trace on async replica workers ----------------------
+    # identical crash/straggler schedule (pool pressure excluded: the
+    # injector rejects it under async workers), identical bars: the
+    # worker threads must preserve exactly-once delivery and recovery
+    gw_a, handles_a, wall_a, inj_a = _drive(
+        engines, requests,
+        gateway_kwargs=dict(
+            probation_seconds=0.12 if smoke else 0.25,
+            retry_backoff_s=0.01,
+            poison_threshold=3,
+            async_workers=True),
+        plan=PLAN_ASYNC_SMOKE if smoke else PLAN_ASYNC, seed=CHAOS_SEED,
+        flight_dir=flight_dir)
+    dumps_a = len(gw_a.flight.dumps)
+    if tmp is not None:
+        tmp.cleanup()
+    st_a = _verify_integrity(gw_a, handles_a, oracle, inj_a, engines)
+    tokens_a = sum(len(h.output) for h in handles_a)
+    retention_a = (tokens_a / wall_a) / (oracle_tokens / wall_oracle)
+    if not smoke and retention_a < GOODPUT_RETENTION_BAR:
+        raise AssertionError(
+            f"async goodput retention under chaos is {retention_a:.3f} "
             f"(bar is {GOODPUT_RETENTION_BAR})")
 
     out = [
@@ -188,8 +230,14 @@ def run(smoke: bool = False) -> list:
          f"{tokens / wall:.1f} tok/s under 2 crashes + straggler + "
          f"pool pressure; retention {retention:.2f} "
          f"(bar >= {GOODPUT_RETENTION_BAR}), "
-         f"{len(rejoined)} rejoined, {served_after_rejoin} served "
-         f"post-rejoin, 0 lost/dup"),
+         f"{st['replicas_rejoined']} rejoined, "
+         f"{st['served_after_rejoin']} served post-rejoin, 0 lost/dup"),
+        ("chaos_faulted_async", wall_a / max(tokens_a, 1) * 1e6,
+         f"{tokens_a / wall_a:.1f} tok/s async workers under 2 crashes + "
+         f"straggler; retention {retention_a:.2f} "
+         f"(bar >= {GOODPUT_RETENTION_BAR}), "
+         f"{st_a['replicas_rejoined']} rejoined, "
+         f"{st_a['served_after_rejoin']} served post-rejoin, 0 lost/dup"),
     ]
     json_rows = [
         {"cell": "chaos_oracle", "n_requests": len(oracle),
@@ -199,16 +247,12 @@ def run(smoke: bool = False) -> list:
          "tokens": tokens, "wall_s": wall, "tok_s": tokens / wall,
          "goodput_retention": retention,
          "outputs_match_oracle": True,
-         "lost_tokens": lost, "duplicate_tokens": dup,
-         "stream_restarts": restarts,
-         "replicas_rejoined": len(rejoined),
-         "served_after_rejoin": served_after_rejoin,
-         "crashes_fired": inj.count("crash"),
-         "straggler_dispatches": inj.count("straggler"),
-         "pool_pressure_events": inj.count("pool_pressure"),
-         "requests_retried": gw.metrics.retried,
-         "leases_expired": qstats["expired"],
-         "flightrec_dumps": dumps},
+         "flightrec_dumps": dumps, **st},
+        {"cell": "chaos_faulted_async", "n_requests": len(handles_a),
+         "tokens": tokens_a, "wall_s": wall_a, "tok_s": tokens_a / wall_a,
+         "goodput_retention": retention_a,
+         "outputs_match_oracle": True,
+         "flightrec_dumps": dumps_a, **st_a},
     ]
     write_bench_json(
         "chaos", json_rows,
@@ -216,6 +260,7 @@ def run(smoke: bool = False) -> list:
               "cache_len": CACHE_LEN, "block_size": BLOCK,
               "workload_seed": 11, "chaos_seed": CHAOS_SEED,
               "plan": PLAN_SMOKE if smoke else PLAN,
+              "plan_async": PLAN_ASYNC_SMOKE if smoke else PLAN_ASYNC,
               "n_requests": len(requests),
               "bar_goodput_retention": GOODPUT_RETENTION_BAR,
               "bar_replicas_rejoined": 1,

@@ -54,6 +54,7 @@ FRESH_TOLERANCE: Dict[str, float] = {
     "stall_cut": 0.25,
     "overhead_frac": 1.0,      # up to 2x the overhead bar at smoke shapes
     "goodput_retention": 0.5,  # tiny chaos runs amortize probation badly
+    "async_speedup": 0.5,      # straggler overlap at smoke shapes is noisy
 }
 DEFAULT_FRESH_TOLERANCE = 0.25
 

@@ -18,6 +18,7 @@ flight recorder when one is armed.
 from __future__ import annotations
 
 import os
+import threading
 import time
 from typing import List, Optional
 
@@ -43,6 +44,14 @@ class FaultInjector:
         self._samples: dict = {}          # replica idx -> _sample_safe count
         self._held_blocks: dict = {}      # id(spec) -> (pool, [block ids])
         self._crashed: set = set()        # id(spec) of one-shot faults done
+        # async gateways fire the dispatch clocks from worker threads and
+        # the step clock from the consumer; one lock keeps every clock
+        # increment + one-shot check atomic. The straggler sleep happens
+        # OUTSIDE it (a held lock would serialize the very overlap the
+        # fault exists to prove async mode hides). Per-replica dispatch
+        # clocks stay deterministic regardless: only the owning worker
+        # increments them.
+        self._mu = threading.Lock()
 
     # ------------------------------------------------------------- arming
     def arm(self, gateway) -> "FaultInjector":
@@ -50,6 +59,15 @@ class FaultInjector:
             raise RuntimeError("injector already armed")
         self._gw = gateway
         self._specs = resolve_targets(self.plan, len(gateway.replicas))
+        if getattr(gateway, "async_workers", False) and \
+                any(f.kind == "pool_pressure" for f in self._specs):
+            # pool_pressure mutates a replica's BlockPool from the consumer
+            # thread while that replica's worker may be mid-step on it —
+            # a data race in the fault itself, not in the code under test
+            raise ValueError(
+                "pool_pressure faults are unsupported with async workers: "
+                "the injector would mutate an engine's pool from outside "
+                "its owner thread")
         for idx, rep in enumerate(gateway.replicas):
             mine = [f for f in self._specs
                     if f.replica == idx and f.kind in
@@ -75,19 +93,25 @@ class FaultInjector:
         orig_step = eng.step
 
         def chaos_step(*a, **kw):
-            d = self._dispatch[idx]
-            self._dispatch[idx] = d + 1
-            for f in crashes:
-                if d == f.at_dispatch and id(f) not in self._crashed:
-                    self._crashed.add(id(f))
-                    self._record("crash", replica=idx, dispatch=d)
-                    raise ChaosReplicaCrash(
-                        f"injected crash: replica {idx} dispatch {d}")
-            for f in slows:
-                if f.at_dispatch <= d < f.until:
-                    self._record("straggler", replica=idx, dispatch=d,
-                                 delay_s=f.delay_s)
-                    time.sleep(f.delay_s)
+            sleep_s = 0.0
+            with self._mu:
+                d = self._dispatch[idx]
+                self._dispatch[idx] = d + 1
+                for f in crashes:
+                    if d == f.at_dispatch and id(f) not in self._crashed:
+                        self._crashed.add(id(f))
+                        self._record("crash", replica=idx, dispatch=d)
+                        raise ChaosReplicaCrash(
+                            f"injected crash: replica {idx} dispatch {d}")
+                for f in slows:
+                    if f.at_dispatch <= d < f.until:
+                        self._record("straggler", replica=idx, dispatch=d,
+                                     delay_s=f.delay_s)
+                        sleep_s += f.delay_s
+            if sleep_s:
+                # outside the lock: the straggler must stall only its own
+                # replica, never peers firing their clocks concurrently
+                time.sleep(sleep_s)
             return orig_step(*a, **kw)
 
         eng.step = chaos_step
@@ -95,35 +119,41 @@ class FaultInjector:
             orig_sample = eng._sample_safe
 
             def chaos_sample(req, logits_row):
-                c = self._samples[idx]
-                self._samples[idx] = c + 1
-                for f in nans:
-                    if c == f.at_dispatch and id(f) not in self._crashed:
-                        self._crashed.add(id(f))
-                        self._record("nan_logits", replica=idx, call=c,
-                                     request_id=req.request_id)
-                        logits_row = np.full(np.shape(logits_row), np.nan,
-                                             np.float32)
+                with self._mu:
+                    c = self._samples[idx]
+                    self._samples[idx] = c + 1
+                    for f in nans:
+                        if c == f.at_dispatch and id(f) not in self._crashed:
+                            self._crashed.add(id(f))
+                            self._record("nan_logits", replica=idx, call=c,
+                                         request_id=req.request_id)
+                            logits_row = np.full(np.shape(logits_row),
+                                                 np.nan, np.float32)
                 return orig_sample(req, logits_row)
 
             eng._sample_safe = chaos_sample
 
     # ----------------------------------------------------- gateway clock
     def _on_gateway_step(self):
-        s = self._gw_step
-        self._gw_step = s + 1
-        for f in self._specs:
-            if f.kind == "lease_expiry" and s == f.at_step \
-                    and id(f) not in self._crashed:
+        with self._mu:
+            s = self._gw_step
+            self._gw_step = s + 1
+            fire_lease = [f for f in self._specs
+                          if f.kind == "lease_expiry" and s == f.at_step
+                          and id(f) not in self._crashed]
+            for f in fire_lease:
                 self._crashed.add(id(f))
-                q = self._gw.queue
-                with q._lock:
-                    n = len(q._leased)
-                    for tid in q._leased:
-                        q._leased[tid] = 0.0
+            pools = [f for f in self._specs if f.kind == "pool_pressure"]
+        for f in fire_lease:
+            q = self._gw.queue
+            with q._lock:
+                n = len(q._leased)
+                for tid in q._leased:
+                    q._leased[tid] = 0.0
+            with self._mu:
                 self._record("lease_expiry", step=s, leases=n)
-            elif f.kind == "pool_pressure":
-                self._pool_window(f, s)
+        for f in pools:
+            self._pool_window(f, s)
 
     def _pool_window(self, f: FaultSpec, s: int):
         key = id(f)

@@ -52,6 +52,12 @@ class TaskQueue:
 
     # ------------------------------------------------------------ journal
     def _log(self, op: str, **kw):
+        # single-writer discipline: every journal append happens under the
+        # queue lock, so records can never interleave mid-line and replay
+        # order equals operation order — asserted, not assumed, now that
+        # gateway worker threads drive the queue concurrently
+        assert self._lock.locked(), \
+            f"journal write {op!r} without the queue lock held"
         if self._journal:
             self._journal.write(json.dumps({"op": op, "t": time.time(), **kw})
                                 + "\n")
@@ -268,6 +274,7 @@ class TaskQueue:
             return [self._tasks[t] for t in self._dead]
 
     def close(self):
-        if self._journal:
-            self._journal.close()
-            self._journal = None
+        with self._lock:
+            if self._journal:
+                self._journal.close()
+                self._journal = None

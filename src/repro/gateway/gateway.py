@@ -20,6 +20,7 @@ plus a `RequestMetrics` record; gauges and percentiles come out through
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 import uuid
 import zlib
@@ -29,6 +30,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.core.queue import TaskQueue
 from repro.core.tasks import TaskSpec
 from repro.gateway.metrics import GatewayMetrics, RequestMetrics
+from repro.gateway.workers import ReplicaWorker, WorkerDied
 from repro.obs import trace as otrace
 from repro.obs.registry import MetricsRegistry
 from repro.gateway.sampler import GREEDY, SamplingParams
@@ -272,7 +274,10 @@ class Gateway:
                  retry_backoff_s: float = 0.0,
                  poison_threshold: int = 2,
                  brownout: Optional[BrownoutConfig] = None,
-                 slo=None, flight=None):
+                 slo=None, flight=None,
+                 async_workers: bool = False,
+                 worker_idle_s: float = 0.001,
+                 async_step_wait_s: float = 0.002):
         """admit_budget enables admission control *by token budget* rather
         than slot count: a request's demand is prompt_len + max_new_tokens,
         and (a) demand > admit_budget (or > every replica's per-request
@@ -295,7 +300,20 @@ class Gateway:
             being offered to the next victim (0/None disables).
           * brownout          — a BrownoutConfig arming the graceful-
             degradation ladder (shed batch tier, then degrade engines,
-            before premium traffic is ever touched)."""
+            before premium traffic is ever touched).
+
+        Concurrency (async_workers=True): each replica runs on its own
+        `ReplicaWorker` thread pumping dispatch + decode, so device
+        compute overlaps across replicas instead of serializing through
+        `step()`. `step()` then becomes the consumer-side pump: it waits
+        (up to async_step_wait_s) for worker progress, supervises worker
+        threads (a dead thread is a crash fault on its replica, and the
+        worker is respawned), and returns the live-request count — the
+        same contract TokenStream iteration and run() rely on in sync
+        mode. Shared gateway state is guarded by one re-entrant lock;
+        the queue / metrics / registry / tracer locks are leaves only
+        ever taken under it. Call `shutdown()` (or use the gateway as a
+        context manager) to stop the workers."""
         if not engines:
             raise ValueError("Gateway needs at least one engine replica")
         self.admit_budget = admit_budget
@@ -335,6 +353,20 @@ class Gateway:
         # and redeliver (they are deliberately never acked), so remember
         # them or each expiry would re-fail / re-adopt the same task
         self._aborted: set = set()
+        # --- concurrency ---
+        # one re-entrant lock guards all gateway maps/lifecycle state; the
+        # queue/metrics/registry/tracer/stream locks are strictly below it
+        # in the acquisition order (they never call back into the gateway)
+        self._lock = threading.RLock()
+        # progress: a token landed / a request went terminal (consumers
+        # blocked in _step_async wake). work_ready: new work or capacity
+        # appeared (idle workers wake). Same underlying lock.
+        self._progress = threading.Condition(self._lock)
+        self._work_ready = threading.Condition(self._lock)
+        self.async_workers = bool(async_workers)
+        self.worker_idle_s = worker_idle_s
+        self.async_step_wait_s = async_step_wait_s
+        self._workers: List[ReplicaWorker] = []
         for r in self.replicas:
             self._wire(r)
         # one registry unifies the per-silo summaries: each silo keeps its
@@ -419,11 +451,14 @@ class Gateway:
         `tenant`/`tier` tag the request for per-tenant telemetry and SLO
         judgment; they ride the durable payload, so journal recovery keeps
         the attribution."""
-        with otrace.span("gateway.submit", prompt_len=len(prompt)):
-            return self._submit_impl(
+        with otrace.span("gateway.submit", prompt_len=len(prompt)), \
+                self._lock:
+            gwreq = self._submit_impl(
                 prompt, max_new_tokens=max_new_tokens, eos_id=eos_id,
                 sampling=sampling, priority=priority, timeout_s=timeout_s,
                 tenant=tenant, tier=tier, on_token=on_token)
+            self._work_ready.notify_all()
+            return gwreq
 
     def _submit_impl(self, prompt, *, max_new_tokens, eos_id, sampling,
                      priority, timeout_s, tenant, tier,
@@ -505,7 +540,10 @@ class Gateway:
             and need <= eng.free_token_capacity()
 
     def _dispatch_ready(self):
-        with otrace.span("gateway.dispatch"):
+        # the lock covers the whole pull-lease-place loop (including the
+        # deferred-release finally), so a concurrent worker can never
+        # observe a task leased from the queue but not yet in _inflight
+        with self._lock, otrace.span("gateway.dispatch"):
             self._dispatch_ready_impl()
 
     def _dispatch_ready_impl(self):
@@ -628,27 +666,36 @@ class Gateway:
         eng.trace_tid = replica.replica_id
 
         def on_token(req: Request, tok: int):
-            gwreq = self._by_gid.get(req.request_id)
-            if gwreq is not None and gwreq.engine_req is req:
-                gwreq.stream.push(tok)
-                self.metrics.token(gwreq.gid)
+            # called from the replica's owner thread mid-`engine.step`,
+            # which deliberately does NOT hold the gateway lock — take it
+            # for the map lookup + bookkeeping (stream/metrics locks nest
+            # under it), then wake consumers blocked in _step_async
+            with self._lock:
+                gwreq = self._by_gid.get(req.request_id)
+                if gwreq is not None and gwreq.engine_req is req:
+                    gwreq.stream.push(tok)
+                    self.metrics.token(gwreq.gid)
+                    self._progress.notify_all()
 
         def on_finish(req: Request):
-            gwreq = self._by_gid.get(req.request_id)
-            if gwreq is None or gwreq.engine_req is not req:
-                return
-            self.queue.ack(gwreq.task_id)
-            self._inflight.pop(gwreq.task_id, None)
-            self._forget_retry_state(gwreq.task_id)
-            if req.error is not None:
-                # request-scoped failure (e.g. sampling blew up on NaN
-                # logits): deterministic, so retry is pointless — ack and
-                # fail just this request, replica stays healthy
-                self.metrics.reject(gwreq.gid, status="failed",
-                                    reason="request_error")
-            else:
-                self.metrics.finish(gwreq.gid)
-            gwreq.stream.finish()
+            with self._lock:
+                gwreq = self._by_gid.get(req.request_id)
+                if gwreq is None or gwreq.engine_req is not req:
+                    return
+                self.queue.ack(gwreq.task_id)
+                self._inflight.pop(gwreq.task_id, None)
+                self._forget_retry_state(gwreq.task_id)
+                if req.error is not None:
+                    # request-scoped failure (e.g. sampling blew up on NaN
+                    # logits): deterministic, so retry is pointless — ack
+                    # and fail just this request, replica stays healthy
+                    self.metrics.reject(gwreq.gid, status="failed",
+                                        reason="request_error")
+                else:
+                    self.metrics.finish(gwreq.gid)
+                gwreq.stream.finish()
+                self._progress.notify_all()
+                self._work_ready.notify_all()
 
         eng.on_token = on_token
         eng.on_finish = on_finish
@@ -661,7 +708,14 @@ class Gateway:
         other replicas, after their backoff window) or dead-letters after
         max_retries. A request that has now killed `poison_threshold`
         distinct replicas is buried instead of requeued — one poison
-        request must not assassinate the fleet serially."""
+        request must not assassinate the fleet serially.
+
+        Callers in async mode already hold the gateway lock; the
+        re-entrant acquire here makes the sync path equally safe."""
+        with self._lock:
+            self._fail_replica_impl(replica, err)
+
+    def _fail_replica_impl(self, replica: EngineReplica, err: Exception):
         replica.healthy = False
         replica.failed_at = time.perf_counter()
         replica.failures += 1
@@ -716,27 +770,31 @@ class Gateway:
     def _maybe_reintegrate(self):
         if self.probation_seconds is None:
             return
-        now = time.perf_counter()
-        for r in self.replicas:
-            if not r.healthy and r.failed_at is not None and \
-                    now - r.failed_at >= self.probation_seconds:
-                self._reintegrate(r)
+        with self._lock:
+            now = time.perf_counter()
+            for r in self.replicas:
+                if not r.healthy and r.failed_at is not None and \
+                        now - r.failed_at >= self.probation_seconds:
+                    self._reintegrate(r)
 
     def _reintegrate(self, replica: EngineReplica):
         """Warm reintegration after probation: the engine is rebuilt from
         scratch — fresh KV pool + radix index + scheduler, every slot
         empty — because the crash left its device state unaccounted for.
         Prefix-affinity needs no explicit flush: placement probes the
-        (now empty) radix index, so stale affinity can't route here."""
-        replica.engine.reset()
-        replica.healthy = True
-        replica.failed_at = None
-        replica.reintegrations += 1
-        replica.reintegrated_at = time.perf_counter()
-        if self.flight is not None and hasattr(self.flight, "note"):
-            self.flight.note("replica_reintegrated",
-                             replica=replica.replica_id,
-                             failures=replica.failures)
+        (now empty) radix index, so stale affinity can't route here.
+        In async mode only the replica's own worker calls this, so the
+        reset can never race that engine's dispatches."""
+        with self._lock:
+            replica.engine.reset()
+            replica.healthy = True
+            replica.failed_at = None
+            replica.reintegrations += 1
+            replica.reintegrated_at = time.perf_counter()
+            if self.flight is not None and hasattr(self.flight, "note"):
+                self.flight.note("replica_reintegrated",
+                                 replica=replica.replica_id,
+                                 failures=replica.failures)
 
     def _abort_queued(self):
         """No healthy replica remains: mark everything still waiting as
@@ -744,18 +802,110 @@ class Gateway:
         ack, so the tasks stay pending in the journal and a restarted
         gateway sharing it redelivers them (at-least-once; an ack here
         would journal unexecuted work as success and lose it forever)."""
-        while (spec := self.queue.get(lease_seconds=self.lease_seconds)) \
-                is not None:
-            if spec.task_id in self._aborted:   # expired lease, redelivered
-                continue
-            self._aborted.add(spec.task_id)
-            gwreq = self._by_task.get(spec.task_id)
-            if gwreq is None:                   # replayed, never dispatched
-                gwreq = self._adopt(spec)
-            if not gwreq.finished:
-                gwreq.stream.finish()
-                self.metrics.reject(gwreq.gid, status="failed",
-                                    reason="outage")
+        with self._lock:
+            while (spec := self.queue.get(lease_seconds=self.lease_seconds)) \
+                    is not None:
+                if spec.task_id in self._aborted:  # expired lease, redelivered
+                    continue
+                self._aborted.add(spec.task_id)
+                gwreq = self._by_task.get(spec.task_id)
+                if gwreq is None:               # replayed, never dispatched
+                    gwreq = self._adopt(spec)
+                if not gwreq.finished:
+                    gwreq.stream.finish()
+                    self.metrics.reject(gwreq.gid, status="failed",
+                                        reason="outage")
+
+    # ------------------------------------------------------ async workers
+    def start_workers(self, gates: Optional[Dict[int, object]] = None):
+        """Spawn one `ReplicaWorker` thread per replica and switch the
+        gateway into async mode (idempotent for `async_workers=True`
+        construction: `step()` calls this lazily). `gates` maps
+        replica_id -> harness gate for deterministic tests."""
+        with self._lock:
+            if self._workers:
+                raise RuntimeError("workers already started")
+            self.async_workers = True
+            gates = gates or {}
+            for r in self.replicas:
+                w = ReplicaWorker(self, r, gate=gates.get(r.replica_id),
+                                  idle_wait_s=self.worker_idle_s)
+                self._workers.append(w)
+        for w in self._workers:
+            w.start()
+
+    def _ensure_workers(self):
+        if not self._workers:
+            self.start_workers()
+
+    def shutdown(self):
+        """Stop every worker thread and join them. Idempotent; the gateway
+        can keep serving synchronously afterwards (async_workers stays
+        set, so a later step() would restart the fleet — call again after
+        clearing it if that is not wanted)."""
+        with self._lock:
+            workers, self._workers = self._workers, []
+            for w in workers:
+                w.stop()
+            self._work_ready.notify_all()
+            self._progress.notify_all()
+        for w in workers:
+            w.join(timeout=5.0)
+
+    def __enter__(self) -> "Gateway":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.shutdown()
+        return False
+
+    def _respawn_worker(self, idx: int, dead: ReplicaWorker):
+        """Supervision: a worker thread died uncleanly. Treat it as a crash
+        fault on its replica (leases nack back to the queue) and give the
+        replica a fresh worker carrying the same gate, so probation-based
+        reintegration still has an owner to run on."""
+        rep = dead.replica
+        if rep.healthy:
+            self._fail_replica(rep, WorkerDied(
+                f"worker thread for replica {rep.replica_id} died"))
+        if self.flight is not None and hasattr(self.flight, "note"):
+            self.flight.note("worker_respawned", replica=rep.replica_id)
+        w = ReplicaWorker(self, rep, gate=dead.gate,
+                          idle_wait_s=dead.idle_wait_s)
+        self._workers[idx] = w
+        w.start()
+
+    def _step_async(self) -> int:
+        """Consumer-side pump while workers own dispatch + decode:
+        supervise worker threads, tick the brownout ladder, handle total
+        outage, then wait (briefly) for worker progress. Returns the live
+        request count — the same contract as the synchronous step, so
+        TokenStream iteration, run(), and owl.replay work unchanged."""
+        with self._lock:
+            self._ensure_workers()
+            for i, w in enumerate(list(self._workers)):
+                if not w.is_alive() and not w.stopped_deliberately \
+                        and w.ident is not None:
+                    self._respawn_worker(i, w)
+            if self.brownout is not None:
+                self.brownout.tick(self.queue.depth())
+            if not any(r.healthy for r in self.replicas) \
+                    and not self._recovery_pending():
+                self._abort_queued()
+                self.metrics.record_gauges(self.queue.depth(), 0)
+                return 0
+            live = len(self._inflight) + self.queue.depth()
+            if live:
+                self._work_ready.notify_all()
+                self._progress.wait(timeout=self.async_step_wait_s)
+                live = len(self._inflight) + self.queue.depth()
+            active = sum(r.engine.active_count() for r in self.replicas
+                         if r.healthy)
+            self.metrics.record_gauges(self.queue.depth(), active)
+            return live
+
+    def worker_stats(self) -> List[dict]:
+        return [w.stats() for w in self._workers]
 
     # ---------------------------------------------------------------- run
     def step(self) -> int:
@@ -763,7 +913,13 @@ class Gateway:
         dispatch ready work, decode one lockstep token on every healthy
         replica (extending its leases immediately before the dispatch),
         sample gauges. Returns the number of requests still live (active
-        anywhere + waiting in the queue)."""
+        anywhere + waiting in the queue).
+
+        With async_workers=True this delegates to `_step_async`: the
+        worker threads do the dispatching and decoding, and step() just
+        supervises and waits for progress."""
+        if self.async_workers:
+            return self._step_async()
         self._maybe_reintegrate()
         if self.brownout is not None:
             self.brownout.tick(self.queue.depth())

@@ -11,6 +11,7 @@ training-sweep figures.
 from __future__ import annotations
 
 import logging
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -136,6 +137,10 @@ class GatewayMetrics:
     MAX_GAUGES = 100_000
 
     def __init__(self, total_slots: int = 0):
+        # guards every lifecycle mutation and summary() — worker threads
+        # report lifecycle edges concurrently in async-gateway mode. A leaf
+        # lock: nothing called under it ever re-enters the gateway.
+        self._mu = threading.RLock()
         self.requests: Dict[int, RequestMetrics] = {}
         self.total_slots = total_slots
         # (t, queue_depth, active_slots) sampled once per gateway step
@@ -156,7 +161,11 @@ class GatewayMetrics:
         self.observers: List = []
 
     def _notify(self, kind: str, m: RequestMetrics):
-        for obs in self.observers:
+        # snapshot: an observer may detach itself (or attach another) from
+        # inside its lifecycle hook, and another thread may register one
+        # concurrently — iterating the live list would silently skip the
+        # observer after a removal's index shift
+        for obs in tuple(self.observers):
             try:
                 obs.lifecycle(kind, m)
             except Exception:       # observers must never break serving
@@ -181,67 +190,74 @@ class GatewayMetrics:
     def submit(self, request_id: int, prompt_len: int, *,
                tenant: Optional[str] = None, tier: int = 0,
                deadline_s: Optional[float] = None) -> RequestMetrics:
-        t = now()
-        if self._t0 is None:
-            self._t0 = t
-        m = RequestMetrics(request_id, prompt_len, submit_t=t,
-                           tenant=tenant, tier=tier, deadline_s=deadline_s)
-        self.requests[request_id] = m
-        self._notify("submit", m)
-        return m
+        with self._mu:
+            t = now()
+            if self._t0 is None:
+                self._t0 = t
+            m = RequestMetrics(request_id, prompt_len, submit_t=t,
+                               tenant=tenant, tier=tier,
+                               deadline_s=deadline_s)
+            self.requests[request_id] = m
+            self._notify("submit", m)
+            return m
 
     def dispatch(self, request_id: int, replica_id: int):
-        m = self.requests[request_id]
-        if not self._transition(m, "running"):
-            return
-        if m.dispatch_t is not None:          # re-dispatch after failure
-            m.retries += 1
-            self.retried += 1
-            m.token_ts.clear()
-            m.first_token_t = None
-        m.dispatch_t = now()
-        m.replica_id = replica_id
-        self.dispatched += 1
-        self._notify("dispatch", m)
+        with self._mu:
+            m = self.requests[request_id]
+            if not self._transition(m, "running"):
+                return
+            if m.dispatch_t is not None:      # re-dispatch after failure
+                m.retries += 1
+                self.retried += 1
+                m.token_ts.clear()
+                m.first_token_t = None
+            m.dispatch_t = now()
+            m.replica_id = replica_id
+            self.dispatched += 1
+            self._notify("dispatch", m)
 
     def token(self, request_id: int):
-        m = self.requests[request_id]
-        t = now()
-        first = m.first_token_t is None
-        if first:
-            m.first_token_t = t
-        m.token_ts.append(t)
-        if first:
-            self._notify("first_token", m)
+        with self._mu:
+            m = self.requests[request_id]
+            t = now()
+            first = m.first_token_t is None
+            if first:
+                m.first_token_t = t
+            m.token_ts.append(t)
+            if first:
+                self._notify("first_token", m)
 
     def requeue(self, request_id: int):
         """Replica failure sent the request back to the queue."""
-        m = self.requests[request_id]
-        if self._transition(m, "queued"):
-            self._notify("requeue", m)
+        with self._mu:
+            m = self.requests[request_id]
+            if self._transition(m, "queued"):
+                self._notify("requeue", m)
 
     def finish(self, request_id: int):
-        m = self.requests[request_id]
-        if not self._transition(m, "done"):
-            return
-        m.finish_t = now()
-        self.completed += 1
-        self._emit_request_trace(m)
-        self._notify("finish", m)
+        with self._mu:
+            m = self.requests[request_id]
+            if not self._transition(m, "done"):
+                return
+            m.finish_t = now()
+            self.completed += 1
+            self._emit_request_trace(m)
+            self._notify("finish", m)
 
     def reject(self, request_id: int, *, status: str = "rejected",
                reason: Optional[str] = None):
-        m = self.requests[request_id]
-        if not self._transition(m, status):
-            return
-        m.finish_t = now()
-        m.finish_reason = reason
-        if status == "rejected":
-            self.rejected += 1
-        else:
-            self.failed += 1
-        self._emit_request_trace(m)
-        self._notify("reject", m)
+        with self._mu:
+            m = self.requests[request_id]
+            if not self._transition(m, status):
+                return
+            m.finish_t = now()
+            m.finish_reason = reason
+            if status == "rejected":
+                self.rejected += 1
+            else:
+                self.failed += 1
+            self._emit_request_trace(m)
+            self._notify("reject", m)
 
     def _emit_request_trace(self, m: RequestMetrics):
         """When tracing is enabled, lay the request's whole lifetime onto
@@ -273,10 +289,16 @@ class GatewayMetrics:
                         pid=pid, tid=tid)
 
     def record_gauges(self, queue_depth: int, active_slots: int):
-        self.gauges.append((now(), queue_depth, active_slots))
+        with self._mu:      # summary() iterates the deque; appends during
+            # that iteration would raise RuntimeError mid-reduction
+            self.gauges.append((now(), queue_depth, active_slots))
 
     # ------------------------------------------------------------ reduction
     def summary(self) -> dict:
+        with self._mu:
+            return self._summary_locked()
+
+    def _summary_locked(self) -> dict:
         done = [m for m in self.requests.values() if m.status == "done"]
         ttfts = [m.ttft for m in done if m.ttft is not None]
         itls = [lat for m in done for lat in m.inter_token_latencies]

@@ -17,9 +17,20 @@ in `stream.events` and then a seamless continuation — never a duplicated
 prefix. This requires the retry to regenerate the same prefix, which holds
 for greedy decoding and for seeded per-request sampling (both true here);
 a nondeterministic sampler would make the post-restart suffix diverge.
+
+Thread-safety (async workers): a stream's producer is always a single
+thread at a time (the owning replica's worker, or the gateway lifecycle
+code — all under the gateway lock), but the *consumer* may be any thread
+iterating the stream. An internal lock guards the buffer and cursors;
+the user `on_token` callback is invoked OUTSIDE it, because a callback is
+allowed to call back into the gateway (e.g. submit a follow-up request)
+and the gateway lock must stay above the stream lock in the acquisition
+order. Single-producer ordering keeps callback invocations in token
+order even without the lock held across the call.
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from typing import Callable, List, Optional
 
@@ -27,6 +38,7 @@ from typing import Callable, List, Optional
 class TokenStream:
     def __init__(self, pump: Optional[Callable[[], int]] = None,
                  on_token: Optional[Callable[[int], None]] = None):
+        self._mu = threading.RLock()
         self._buf: deque = deque()
         self._done = False
         self._pump = pump
@@ -48,44 +60,50 @@ class TokenStream:
 
     # ------------------------------------------------------- producer side
     def push(self, tok: int):
-        if self._replay_skip > 0:
-            # a post-restart retry re-emits from token 0; this prefix was
-            # already delivered before the failure — swallow it
-            self._replay_skip -= 1
-            return
-        self._buf.append(tok)
-        if self._cb:
-            self._cb_seen += 1
+        with self._mu:
+            if self._replay_skip > 0:
+                # a post-restart retry re-emits from token 0; this prefix
+                # was already delivered before the failure — swallow it
+                self._replay_skip -= 1
+                return
+            self._buf.append(tok)
+            cb = self._cb
+            if cb:
+                self._cb_seen += 1
+        if cb:
             try:
-                self._cb(tok)
+                cb(tok)
             except Exception as err:  # noqa: BLE001
                 # a client callback bug must not look like replica failure
                 # (it would poison every replica in turn as the request
                 # retries); disable the callback, keep the error and keep
                 # decoding — the buffered/iterator path still works
-                self.callback_error = err
-                self._cb = None
+                with self._mu:
+                    self.callback_error = err
+                    self._cb = None
 
     def finish(self, reason: Optional[str] = None,
                code: Optional[int] = None):
         """Mark the stream terminal. `reason`/`code` record *why* (e.g.
         ("over_capacity", 429) from token-budget admission control); the
         first terminal event wins."""
-        if not self._done:
-            self.finish_reason = reason
-            self.status_code = code
-        self._done = True
+        with self._mu:
+            if not self._done:
+                self.finish_reason = reason
+                self.status_code = code
+            self._done = True
 
     def restart(self):
         """Replica-failure retry: drop buffered-but-unread tokens (the
         consumer never saw them; the retry will regenerate them), arm the
         replay cursor to swallow the `delivered` prefix the consumer DID
         see, and log an explicit `restarted` event."""
-        self._buf.clear()
-        self._replay_skip = self.delivered
-        self.restarts += 1
-        self.events.append({"event": "restarted",
-                            "visible_tokens": self.delivered})
+        with self._mu:
+            self._buf.clear()
+            self._replay_skip = self.delivered
+            self.restarts += 1
+            self.events.append({"event": "restarted",
+                                "visible_tokens": self.delivered})
 
     # legacy name; same semantics (pre-restart callers expected "re-emit
     # from the start", which silently duplicated the delivered prefix)
@@ -98,31 +116,41 @@ class TokenStream:
         the callback is the visibility cursor; otherwise the iterator/drain
         cursor is. (Consuming through BOTH is ambiguous — the larger cursor
         wins, so replay never duplicates for the faster consumer.)"""
-        return max(self._cb_seen, self._popped)
+        with self._mu:
+            return max(self._cb_seen, self._popped)
 
     @property
     def finished(self) -> bool:
-        return self._done and not self._buf
+        with self._mu:
+            return self._done and not self._buf
 
     def drain(self) -> List[int]:
         """Non-blocking: all tokens buffered so far."""
-        out = list(self._buf)
-        self._buf.clear()
-        self._popped += len(out)
-        return out
+        with self._mu:
+            out = list(self._buf)
+            self._buf.clear()
+            self._popped += len(out)
+            return out
 
     def __iter__(self):
         return self
 
     def __next__(self) -> int:
-        while not self._buf:
-            if self._done:
-                raise StopIteration
-            if self._pump is None:
-                raise StopIteration
-            if self._pump() <= 0 and not self._buf and not self._done:
+        # the pump runs OUTSIDE the stream lock: it is the gateway's step,
+        # which takes the gateway lock, and gateway -> stream is the
+        # established acquisition order (holding stream here would invert
+        # it). The buffer is re-checked under the lock each pass.
+        while True:
+            with self._mu:
+                if self._buf:
+                    self._popped += 1
+                    return self._buf.popleft()
+                if self._done or self._pump is None:
+                    raise StopIteration
+            if self._pump() <= 0:
+                with self._mu:
+                    if self._buf or self._done:
+                        continue
                 raise RuntimeError(
                     "TokenStream stalled: gateway made no progress but the "
                     "request is not finished (rejected/dead-lettered?)")
-        self._popped += 1
-        return self._buf.popleft()

@@ -186,6 +186,10 @@ def main():
                     "dispatch index, s = gateway step index)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="seed resolving unpinned fault targets in --chaos")
+    ap.add_argument("--async-workers", action="store_true",
+                    help="run each replica on its own worker thread "
+                    "pumping the durable queue (device compute overlaps "
+                    "across replicas; step() supervises and waits)")
     args = ap.parse_args()
 
     if args.trace:
@@ -215,7 +219,8 @@ def main():
                        retry_backoff_s=args.retry_backoff,
                        brownout=(BrownoutConfig() if args.brownout
                                  else None),
-                       slo=slo_tiers, flight=args.flight_recorder)
+                       slo=slo_tiers, flight=args.flight_recorder,
+                       async_workers=args.async_workers)
     injector = None
     if args.chaos:
         from repro.chaos import FaultInjector, parse_plan
@@ -234,6 +239,7 @@ def main():
                 print(f"[serve] flight recorder: exception dump -> {path}")
         raise
     finally:
+        gw.shutdown()
         if args.trace:
             tr = otrace.disable()
             if tr is not None:

@@ -22,6 +22,7 @@ bench regression gate diffs snapshot-derived JSON fields across PRs.
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, Optional, Sequence
 
 # latency-in-ms buckets: ~2.5x steps from 50us to 10s, the range one
@@ -142,18 +143,23 @@ class MetricsRegistry:
     """
 
     def __init__(self):
+        # leaf lock for async-gateway mode: get-or-create from two worker
+        # threads must hand back ONE instrument (a lost race would fork a
+        # metric into two objects, silently splitting its counts)
+        self._mu = threading.RLock()
         self._instruments: Dict[str, object] = {}
         self._scopes: Dict[str, Callable[[], Optional[dict]]] = {}
 
     # ----------------------------------------------------- instruments
     def _get(self, name: str, typ, factory):
-        inst = self._instruments.get(name)
-        if inst is None:
-            inst = self._instruments[name] = factory()
-        elif not isinstance(inst, typ):
-            raise TypeError(f"metric {name!r} is {type(inst).__name__}, "
-                            f"not {typ.__name__}")
-        return inst
+        with self._mu:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = factory()
+            elif not isinstance(inst, typ):
+                raise TypeError(f"metric {name!r} is {type(inst).__name__}, "
+                                f"not {typ.__name__}")
+            return inst
 
     def counter(self, name: str) -> Counter:
         return self._get(name, Counter, Counter)
@@ -170,7 +176,8 @@ class MetricsRegistry:
                        provider: Callable[[], Optional[dict]]):
         """Attach a silo: `provider()` is called at snapshot time and may
         return None to mean "feature off, omit the scope"."""
-        self._scopes[name] = provider
+        with self._mu:
+            self._scopes[name] = provider
 
     # -------------------------------------------------------- snapshot
     def snapshot(self) -> dict:
@@ -178,12 +185,19 @@ class MetricsRegistry:
         registered silo (in registration order, Nones omitted) and every
         registry-owned instrument (histograms expand to their summary
         stats as ``<name>_<stat>`` keys)."""
+        # copy the maps under the lock, call the providers outside it:
+        # a provider (e.g. the gateway's summary) takes its own silo lock,
+        # and holding the registry lock across that call would add a
+        # registry -> silo edge the lock hierarchy does not allow
+        with self._mu:
+            scopes = dict(self._scopes)
+            instruments = dict(self._instruments)
         snap: Dict[str, dict] = {}
-        for name, provider in self._scopes.items():
+        for name, provider in scopes.items():
             d = provider()
             if d is not None:
                 snap[name] = dict(d)
-        for name, inst in sorted(self._instruments.items()):
+        for name, inst in sorted(instruments.items()):
             scope, _, key = name.rpartition(".")
             scope = scope or "metrics"
             dst = snap.setdefault(scope, {})

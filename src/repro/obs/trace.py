@@ -35,6 +35,7 @@ story, but per request and zoomable.
 from __future__ import annotations
 
 import json
+import threading
 import time
 from collections import deque
 from pathlib import Path
@@ -106,6 +107,11 @@ class Tracer:
         self.dropped = 0            # spans evicted by the ring
         self._track_names: Dict[Tuple[int, int], str] = {}
         self._epoch = time.perf_counter()
+        # leaf lock: worker threads record spans concurrently in async-
+        # gateway mode, and exporting iterates the ring — a concurrent
+        # append during that iteration raises RuntimeError, corrupting the
+        # Perfetto export. Nothing under this lock calls out of the tracer.
+        self._mu = threading.Lock()
 
     @property
     def epoch(self) -> float:
@@ -130,42 +136,49 @@ class Tracer:
                            args))
 
     def _record(self, span: _Span):
-        self.recorded += 1
-        if len(self._ring) == self.capacity:
-            self.dropped += 1
-        self._ring.append(span)
+        with self._mu:
+            self.recorded += 1
+            if len(self._ring) == self.capacity:
+                self.dropped += 1
+            self._ring.append(span)
 
     def set_track_name(self, pid: int, tid: int, name: str):
-        self._track_names[(pid, tid)] = name
+        with self._mu:
+            self._track_names[(pid, tid)] = name
 
     # -------------------------------------------------------- reduction
     def __len__(self) -> int:
-        return len(self._ring)
+        with self._mu:
+            return len(self._ring)
 
     def stats(self) -> dict:
         """Flat counters for the unified metrics snapshot."""
-        return {
-            "enabled": True,
-            "capacity": self.capacity,
-            "spans_recorded": self.recorded,
-            "spans_buffered": len(self._ring),
-            "spans_dropped": self.dropped,
-        }
+        with self._mu:
+            return {
+                "enabled": True,
+                "capacity": self.capacity,
+                "spans_recorded": self.recorded,
+                "spans_buffered": len(self._ring),
+                "spans_dropped": self.dropped,
+            }
 
     def events(self) -> list:
         """Chrome-trace-event dicts: ``ph="X"`` complete events (ts/dur
         in microseconds since the tracer's epoch) preceded by ``ph="M"``
         process/track name metadata, sorted by begin time."""
+        with self._mu:
+            track_names = dict(self._track_names)
+            ring = list(self._ring)
         evs = []
         for pid, pname in ((HOST_PID, "serving host"),
                            (REQUEST_PID, "requests")):
             evs.append({"ph": "M", "name": "process_name", "pid": pid,
                         "tid": 0, "ts": 0,
                         "args": {"name": pname}})
-        for (pid, tid), name in sorted(self._track_names.items()):
+        for (pid, tid), name in sorted(track_names.items()):
             evs.append({"ph": "M", "name": "thread_name", "pid": pid,
                         "tid": tid, "ts": 0, "args": {"name": name}})
-        spans = sorted(self._ring, key=lambda s: (s.t0, -s.dur))
+        spans = sorted(ring, key=lambda s: (s.t0, -s.dur))
         for s in spans:
             ev = {"ph": "X", "name": s.name, "cat": s.cat,
                   "ts": (s.t0 - self._epoch) * 1e6, "dur": s.dur * 1e6,
