@@ -1,0 +1,245 @@
+"""Telemetry benchmark: whole-pipeline overhead and attribution integrity.
+
+Two machine-checked claims back the continuous-telemetry subsystem
+(``repro.obs``: TimeSeriesSampler + OpenMetrics endpoint + utilization
+ledger), recorded in the committed BENCH_obs.json and gated by
+``benchmarks.run --check``:
+
+  * ``bar_max_overhead_frac`` — arming the *whole* pipeline (background
+    sampler thread, live ``/metrics`` endpoint under a concurrent
+    scraper, per-tenant ledger) costs < 3% wall on a warmed two-replica
+    gateway workload. Armed/disarmed reps are interleaved so machine
+    load drift hits both modes equally; best-of-reps per mode cancels
+    scheduler noise.
+  * ``bar_max_attribution_err_frac`` — on every decode path of the
+    parity matrix, the ledger's attributed device-seconds equal the
+    engines' own step-latency histogram totals within 1% (in practice
+    to float ulps: one clock read feeds both sinks), and the armed run
+    emits byte-identical tokens to the disarmed oracle
+    (``outputs_match``: telemetry is a pure observer).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import urllib.request
+
+import jax
+
+from benchmarks._util import smoke_requested, write_bench_json
+from repro.configs import registry
+from repro.gateway.gateway import Gateway
+from repro.models import transformer as T
+from repro.obs.export import MetricsServer, parse_openmetrics
+from repro.serve.engine import ServeEngine
+
+REPLICAS, SLOTS, CACHE_LEN, BLOCK = 2, 4, 64, 8
+OVERHEAD_BAR = 0.03
+ATTRIBUTION_BAR = 0.01
+
+# every decode path of the parity matrix (same rows the tier-1 suite
+# holds to token parity in tests/test_ledger.py)
+PATHS = {
+    "dense": dict(kv_layout="dense"),
+    "paged_ref": dict(kv_layout="paged", decode_kernel="reference"),
+    "paged_pallas": dict(kv_layout="paged", decode_kernel="pallas"),
+    "fused": dict(kv_layout="paged", fused_tokens=4),
+    "speculative": dict(kv_layout="paged", spec_tokens=3, drafter="ngram"),
+    "chunked": dict(kv_layout="paged", scheduler="chunked", chunk_budget=3),
+}
+
+
+def _prompts(n: int, vocab: int) -> list:
+    return [[(7 * i + j) % vocab for j in range(4 + i % 5)]
+            for i in range(n)]
+
+
+def _submit_all(gw, prompts, max_new: int) -> list:
+    return [gw.submit(p, max_new_tokens=max_new + i % 3,
+                      tenant=f"team{i % 3}", tier=i % 3)
+            for i, p in enumerate(prompts)]
+
+
+def _scrape(port: int) -> str:
+    with urllib.request.urlopen(
+            f"http://127.0.0.1:{port}/metrics", timeout=10) as resp:
+        return resp.read().decode()
+
+
+class _Scraper:
+    """Background client hammering /metrics while the gateway runs, so
+    the armed wall includes exposition-under-load, not an idle socket."""
+
+    def __init__(self, port: int, period_s: float = 0.25):
+        self.port, self.period_s, self.n = port, period_s, 0
+        self.err = None
+        self._stop = threading.Event()
+        self._t = threading.Thread(target=self._loop, name="bench-scraper",
+                                   daemon=True)
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                parse_openmetrics(_scrape(self.port))  # strict: drift raises
+            except Exception as e:  # noqa: BLE001 — surfaced at __exit__
+                self.err = e
+                return
+            self.n += 1
+            self._stop.wait(self.period_s)
+
+    def __enter__(self):
+        self._t.start()
+        return self
+
+    def __exit__(self, *exc):
+        self._stop.set()
+        self._t.join(timeout=5)
+        if self.err is not None:
+            raise AssertionError(
+                f"live scrape failed mid-run: {self.err}") from self.err
+
+
+def _hist_total_s(gw) -> float:
+    return sum(sum(h.total for h in r.engine.step_times.values())
+               for r in gw.replicas) / 1e3
+
+
+def run(smoke: bool = False) -> list:
+    smoke = smoke or smoke_requested()
+    cfg = registry.get("qwen3-1.7b", reduced=True)
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    out, json_rows = [], []
+
+    # ------------------------------------------- whole-pipeline overhead
+    engines = [ServeEngine(params, cfg, batch_slots=SLOTS,
+                           cache_len=CACHE_LEN, kv_layout="paged",
+                           block_size=BLOCK)
+               for _ in range(REPLICAS)]
+    for eng in engines:                 # pay the jit compiles untimed
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run()
+    # smoke keeps full-size reps for this cell: a tiny wall (~0.1 s)
+    # turns scheduler jitter into whole percentage points of "overhead"
+    n, max_new = 16, 8
+    prompts = _prompts(n, cfg.vocab_size)
+    reps = 5
+    # smoke walls are tiny and jittery by design: the in-run assert takes
+    # the same 2x slack the --check gate's FRESH_TOLERANCE grants
+    # overhead_frac; the committed full run keeps the strict bar
+    bar = OVERHEAD_BAR * (2.0 if smoke else 1.0)
+
+    def _rep(armed: bool) -> tuple:
+        for eng in engines:
+            eng.reset()
+            eng.ledger = None           # a prior armed rep tagged them
+        gw = Gateway(engines, policy="round-robin")
+        srv = scraper = None
+        if armed:
+            gw.arm_ledger()
+            # the launcher's default cadence (serve --sample-interval):
+            # the bar judges the shipped configuration, not a stress knob
+            gw.start_sampler(interval_s=0.05)
+            srv = MetricsServer(gw.snapshot, sampler=gw.sampler,
+                                ledger=gw.ledger)
+            scraper = _Scraper(srv.start()).__enter__()
+        _submit_all(gw, prompts, max_new)
+        t0 = time.perf_counter()
+        gw.run()
+        wall = time.perf_counter() - t0
+        scrapes = samples = 0
+        if armed:
+            scraper.__exit__()
+            scrapes, samples = scraper.n, gw.sampler.samples
+            srv.stop()
+        gw.shutdown()
+        return wall, scrapes, samples
+
+    walls = {False: [], True: []}
+    scrapes = samples = 0
+    for _ in range(reps):
+        for armed in (False, True):     # interleaved: drift hits both
+            wall, sc, sa = _rep(armed)
+            walls[armed].append(wall)
+            scrapes += sc
+            samples += sa
+    wall_off, wall_on = min(walls[False]), min(walls[True])
+    overhead = wall_on / wall_off - 1.0
+    if overhead >= bar:
+        raise AssertionError(
+            f"armed telemetry pipeline costs {overhead * 100:.1f}% wall "
+            f"(bar is {bar * 100:.0f}%)")
+    cell = "obs_pipeline_overhead"
+    out.append((cell, wall_on / max(n * max_new, 1) * 1e6,
+                f"{overhead * 100:+.1f}% wall with sampler+endpoint+ledger "
+                f"armed (bar <{bar * 100:.0f}%, best of {reps}, "
+                f"{scrapes} live scrapes)"))
+    json_rows.append({"cell": cell, "offered": n, "reps": reps,
+                      "wall_disarmed_s": wall_off, "wall_armed_s": wall_on,
+                      "overhead_frac": overhead,
+                      "within_bar": overhead < bar,
+                      "scrapes": scrapes, "sampler_samples": samples})
+
+    # --------------------------- attribution integrity per decode path
+    n_attr, max_new_attr = (4, 3) if smoke else (8, 6)
+    prompts_attr = _prompts(n_attr, cfg.vocab_size)
+    for path in sorted(PATHS):
+        kw = dict(PATHS[path])
+        if kw.get("kv_layout") == "paged":
+            kw["block_size"] = BLOCK
+
+        def _drive(armed: bool) -> tuple:
+            gw = Gateway.build(params, cfg, replicas=REPLICAS,
+                               batch_slots=SLOTS, cache_len=CACHE_LEN, **kw)
+            srv = None
+            if armed:
+                gw.arm_ledger()
+                gw.start_sampler(interval_s=0.02)
+                srv = MetricsServer(gw.snapshot, sampler=gw.sampler,
+                                    ledger=gw.ledger)
+                srv.start()
+            reqs = _submit_all(gw, prompts_attr, max_new_attr)
+            t0 = time.perf_counter()
+            gw.run()
+            wall = time.perf_counter() - t0
+            if armed:                   # endpoint live over the hot state
+                parse_openmetrics(_scrape(srv.stats()["port"]))
+                srv.stop()
+            gw.shutdown()
+            assert all(r.done for r in reqs), f"{path}: requests lost"
+            return [r.output for r in reqs], gw, wall
+
+        oracle, _, _ = _drive(armed=False)
+        armed_out, gw, wall = _drive(armed=True)
+        outputs_match = armed_out == oracle
+        assert outputs_match, f"telemetry changed tokens on {path}"
+        rep = gw.ledger.report()
+        hist_s = _hist_total_s(gw)
+        err = abs(rep["attributed_device_s"] - hist_s) / max(hist_s, 1e-12)
+        if err >= ATTRIBUTION_BAR:
+            raise AssertionError(
+                f"{path}: attribution err {err:.2e} vs engine histograms "
+                f"(bar is {ATTRIBUTION_BAR})")
+        tokens = sum(len(o) for o in armed_out)
+        cell = f"obs_attribution_{path}"
+        out.append((cell, wall / max(tokens, 1) * 1e6,
+                    f"attribution err {err:.1e} over {rep['steps']} steps, "
+                    f"{len(rep['tenants'])} tenants, tokens match oracle"))
+        json_rows.append({"cell": cell, "n_requests": n_attr,
+                          "tokens": tokens, "wall_armed_s": wall,
+                          "steps": rep["steps"],
+                          "device_s": rep["total_device_s"],
+                          "attribution_err_frac": err,
+                          "conservation_err_frac":
+                              rep["conservation_err_frac"],
+                          "n_tenants": len(rep["tenants"]),
+                          "outputs_match": outputs_match})
+
+    write_bench_json(
+        "obs", json_rows,
+        meta={"arch": cfg.arch_id, "replicas": REPLICAS, "slots": SLOTS,
+              "cache_len": CACHE_LEN, "block_size": BLOCK,
+              "paths": sorted(PATHS),
+              "bar_max_overhead_frac": OVERHEAD_BAR,
+              "bar_max_attribution_err_frac": ATTRIBUTION_BAR},
+        smoke=smoke)
+    return out

@@ -39,8 +39,8 @@ from typing import Dict, List, Optional
 from benchmarks._util import REPO_ROOT
 
 # benches with a committed BENCH_<name>.json -> benchmarks.run module key
-CHECKED_BENCHES = ("chaos", "gateway", "kernels", "kvcache", "scheduler",
-                   "serving", "specdec")
+CHECKED_BENCHES = ("chaos", "gateway", "kernels", "kvcache", "obs",
+                   "scheduler", "serving", "specdec")
 
 # booleans that must be true in every row carrying them
 _PARITY_PREFIXES = ("outputs_match", "within_bar")

@@ -36,6 +36,7 @@ MODULES = [
     ("specdec", "benchmarks.bench_specdec"),
     ("scheduler", "benchmarks.bench_scheduler"),
     ("chaos", "benchmarks.bench_chaos"),
+    ("obs", "benchmarks.bench_obs"),
     ("roofline", "benchmarks.roofline"),
 ]
 

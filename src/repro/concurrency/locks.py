@@ -218,6 +218,12 @@ def audit_serving_stack(gw, auditor: Optional[LockOrderAuditor] = None
     gw.queue._lock = aud.wrap("queue", gw.queue._lock)
     gw.metrics._mu = aud.wrap("metrics", gw.metrics._mu)
     gw.registry._mu = aud.wrap("registry", gw.registry._mu)
+    # continuous-telemetry leaves (when armed): the sampler appends and
+    # the ledger attributes under their own locks, never calling out
+    if getattr(gw, "sampler", None) is not None:
+        gw.sampler._mu = aud.wrap("sampler", gw.sampler._mu)
+    if getattr(gw, "ledger", None) is not None:
+        gw.ledger._mu = aud.wrap("ledger", gw.ledger._mu)
     tr = otrace.active()
     if tr is not None:
         tr._mu = aud.wrap("tracer", tr._mu)

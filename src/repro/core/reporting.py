@@ -228,6 +228,128 @@ def slo_dashboard(slo: Dict[str, dict]) -> str:
     return "\n".join(parts)
 
 
+def worker_health_table(workers: Dict[str, object]) -> str:
+    """Markdown table of the async worker fleet
+    (`Gateway.workers_summary`): one row per replica worker thread with
+    its pump/step/error counters — the Fig 7 worker-status panel for
+    threaded mode, where slot gauges alone can't show which worker died."""
+    header = ("worker", "alive", "pumps", "engine steps", "pump errors")
+    rows = [(f"replica{s['replica']}", "yes" if s["alive"] else "NO",
+             s["pumps"], s["engine_steps"], s["pump_errors"])
+            for s in workers.get("per_worker", [])]
+    rows.append(("fleet total", f"{workers['alive']}/{workers['n_workers']}",
+                 workers["pumps"], workers["engine_steps"],
+                 workers["pump_errors"]))
+    return to_markdown(rows, header)
+
+
+def ledger_dashboard(report: Dict[str, object]) -> str:
+    """Render a `UtilizationLedger.report()`: per-tenant device-time
+    attribution (the cost denominator to the SLO dashboard's outcome
+    numerator), per-tier roll-up, device time by step kind, and the
+    conservation line — attributed vs measured device-seconds, which
+    `bench_obs` bars at 1%."""
+    header = ("tenant", "tier", "device s", "share", "tokens",
+              "block·s", "steps")
+    rows = [(name, d["tier"] if d["tier"] is not None else "—",
+             _fmt_value(d["device_s"]), f"{d['frac']:.1%}", d["tokens"],
+             _fmt_value(d["block_s"]), d["steps"])
+            for name, d in sorted(report.get("tenants", {}).items(),
+                                  key=lambda kv: -kv[1]["device_s"])]
+    parts = ["## utilization ledger (device-time attribution)",
+             to_markdown(rows, header)]
+    tiers = report.get("tiers", {})
+    if len(tiers) > 1:
+        theader = ("tier", "device s", "tokens", "block·s")
+        trows = [(t, _fmt_value(d["device_s"]), d["tokens"],
+                  _fmt_value(d["block_s"]))
+                 for t, d in sorted(tiers.items())]
+        parts += ["\n### per tier", to_markdown(trows, theader)]
+    kinds = report.get("by_kind", {})
+    if kinds:
+        parts += ["\n### device time by step kind",
+                  to_markdown([(k, _fmt_value(v))
+                               for k, v in sorted(kinds.items())],
+                              ("kind", "device s"))]
+    parts.append(
+        f"\nattributed {_fmt_value(report['attributed_device_s'])} s of "
+        f"{_fmt_value(report['total_device_s'])} s measured over "
+        f"{report['steps']} steps (conservation err "
+        f"{report['conservation_err_frac']:.2e}); pool occupancy "
+        f"{_fmt_value(report['pool_block_s'])} block·s")
+    return "\n".join(parts)
+
+
+# ------------------------------------------------- time-series sparklines
+
+_SPARK = "▁▂▃▄▅▆▇█"
+
+#: series the live `serve --watch` panel shows by default (any
+#: ``pressure.shed_*`` series that appears is appended automatically)
+DEFAULT_PANEL_SERIES = ("gateway.queue_depth", "gateway.active_slots",
+                        "pressure.brownout_level")
+
+
+def sparkline(values: Sequence[float], *, width: int = 48,
+              lo: Optional[float] = None, hi: Optional[float] = None) -> str:
+    """Render a value sequence as one line of block glyphs. Longer
+    sequences are bucket-mean resampled to `width`; `lo`/`hi` pin the
+    scale (default: the data's own min/max, flat series render low)."""
+    vals = [float(v) for v in values]
+    if not vals:
+        return ""
+    if len(vals) > width:
+        buckets = []
+        for i in range(width):
+            a = i * len(vals) // width
+            b = max(a + 1, (i + 1) * len(vals) // width)
+            chunk = vals[a:b]
+            buckets.append(sum(chunk) / len(chunk))
+        vals = buckets
+    v0 = min(vals) if lo is None else float(lo)
+    v1 = max(vals) if hi is None else float(hi)
+    span = (v1 - v0) or 1.0
+    top = len(_SPARK) - 1
+    return "".join(
+        _SPARK[max(0, min(top, int((v - v0) / span * top + 0.5)))]
+        for v in vals)
+
+
+def timeseries_panel(sampler, names: Optional[Sequence[str]] = None, *,
+                     width: int = 48,
+                     window_s: Optional[float] = None) -> str:
+    """Terminal sparkline panel over a `TimeSeriesSampler`'s rings — the
+    `serve --watch` view. One line per series: name, sparkline over the
+    trailing `window_s` (full retention when None), last/min/max. Empty
+    string when no requested series has points yet (watch threads print
+    nothing rather than a bare header)."""
+    if names is None:
+        avail = sampler.names()
+        names = [n for n in DEFAULT_PANEL_SERIES if n in avail]
+        names += [n for n in avail if n.startswith("pressure.shed_")]
+    lines = []
+    for name in names:
+        pts = sampler.series(name)
+        if window_s is not None and pts:
+            cut = pts[-1][0] - window_s
+            pts = [p for p in pts if p[0] >= cut]
+        if not pts:
+            continue
+        vals = [v for _, v in pts]
+        lines.append(f"{name:<28} {sparkline(vals, width=width)}  "
+                     f"last={_fmt_value(vals[-1])} min={_fmt_value(min(vals))}"
+                     f" max={_fmt_value(max(vals))}")
+    if not lines:
+        return ""
+    return "\n".join(["## telemetry (sparklines)"] + lines)
+
+
+def sampler_stats_table(st: Dict[str, object]) -> str:
+    """Markdown table of the continuous-telemetry sampler's counters
+    (`repro.obs.timeseries.TimeSeriesSampler.stats`)."""
+    return _metric_table(st, ("sampler metric", "value"))
+
+
 def flight_stats_table(fl: Dict[str, object]) -> str:
     """Markdown table of the flight recorder's state
     (`repro.obs.flight.FlightRecorder.stats`)."""
@@ -277,11 +399,19 @@ def unified_dashboard(snapshot: Dict[str, dict],
                                    kvcache=snapshot.get("kvcache"),
                                    spec=snapshot.get("speculation"),
                                    scheduler=snapshot.get("scheduler")))
+    if snapshot.get("workers"):
+        parts += ["\n## worker fleet",
+                  worker_health_table(snapshot["workers"])]
     if snapshot.get("slo"):
         parts += ["", slo_dashboard(snapshot["slo"])]
+    if snapshot.get("ledger"):
+        parts += ["", ledger_dashboard(snapshot["ledger"])]
     if snapshot.get("engine_steps"):
         parts += ["\n## engine step latency",
                   engine_steps_table(snapshot["engine_steps"])]
+    if snapshot.get("sampler"):
+        parts += ["\n## telemetry sampler",
+                  sampler_stats_table(snapshot["sampler"])]
     if snapshot.get("trace"):
         parts += ["\n## span tracer", trace_stats_table(snapshot["trace"])]
     if snapshot.get("flight"):

@@ -380,8 +380,14 @@ class Gateway:
         self.registry.register_scope("speculation", self.spec_summary)
         self.registry.register_scope("engine_steps", self.engine_step_summary)
         self.registry.register_scope("trace", self._trace_summary)
+        self.registry.register_scope("workers", self.workers_summary)
         if self.brownout is not None:
             self.registry.register_scope("brownout", self.brownout.stats)
+        # continuous-telemetry attachments (armed via start_sampler /
+        # arm_ledger): the time-series sampler thread and the per-tenant
+        # utilization ledger
+        self.sampler = None
+        self.ledger = None
         # SLO tracker / flight recorder: lifecycle observers with registry
         # scopes, attachable at construction or later (set_slo /
         # arm_flight_recorder) — `slo` may also be a {tier: SLOSpec} dict
@@ -414,9 +420,41 @@ class Gateway:
             rec.slo = self.slo
         self.flight = rec
         rec.arm()
+        if getattr(rec, "sampler", None) is None:
+            rec.sampler = self.sampler      # recent series ride the dumps
         self.metrics.observers.append(rec)
         self.registry.register_scope("flight", rec.stats)
         return rec
+
+    def arm_ledger(self) -> "UtilizationLedger":
+        """Attach the per-tenant utilization ledger: every replica's engine
+        reports each dispatch's measured step time split across slots by
+        token share (plus KV block-seconds), and the report rides
+        `snapshot()["ledger"]`. Idempotent."""
+        from repro.obs.ledger import UtilizationLedger
+        if self.ledger is None:
+            self.ledger = UtilizationLedger()
+            for r in self.replicas:
+                r.engine.ledger = self.ledger
+            self.registry.register_scope("ledger", self.ledger.stats)
+        return self.ledger
+
+    def start_sampler(self, *, interval_s: float = 0.1,
+                      capacity: int = 600) -> "TimeSeriesSampler":
+        """Start the continuous-telemetry sampler thread: `snapshot()` is
+        pulled every `interval_s` seconds into ring-buffered time series
+        (see `obs.timeseries`). Stopped by `shutdown()`. Idempotent — a
+        running sampler is returned as-is."""
+        from repro.obs.timeseries import TimeSeriesSampler
+        if self.sampler is None:
+            self.sampler = TimeSeriesSampler(
+                self.snapshot, interval_s=interval_s, capacity=capacity)
+            self.registry.register_scope("sampler", self.sampler.stats)
+            if self.flight is not None and \
+                    getattr(self.flight, "sampler", None) is None:
+                self.flight.sampler = self.sampler
+        self.sampler.start()
+        return self.sampler
 
     @classmethod
     def build(cls, params, cfg, *, replicas: int = 1, batch_slots: int = 4,
@@ -616,6 +654,10 @@ class Gateway:
                       gwreq.eos_id, gwreq.sampling)
         gwreq.engine_req = req
         gwreq.replica_id = replica.replica_id
+        if self.ledger is not None:
+            # engine request_id == gid (set above), so the ledger can map
+            # every step share back to this request's tenant/tier
+            self.ledger.tag(gwreq.gid, gwreq.tenant, gwreq.tier)
         replica.engine.enqueue(req)
         self._inflight[task_id] = (gwreq, replica)
         self.metrics.dispatch(gwreq.gid, replica.replica_id)
@@ -851,6 +893,10 @@ class Gateway:
             self._progress.notify_all()
         for w in workers:
             w.join(timeout=5.0)
+        # outside the gateway lock: the sampler thread's snapshot() takes
+        # it, so joining under the lock could deadlock on a mid-tick stop
+        if self.sampler is not None:
+            self.sampler.stop()
 
     def __enter__(self) -> "Gateway":
         return self
@@ -902,10 +948,38 @@ class Gateway:
             active = sum(r.engine.active_count() for r in self.replicas
                          if r.healthy)
             self.metrics.record_gauges(self.queue.depth(), active)
+            self._sample_pressure_gauges()
             return live
 
     def worker_stats(self) -> List[dict]:
         return [w.stats() for w in self._workers]
+
+    def workers_summary(self) -> Optional[dict]:
+        """Worker-health scope for `snapshot()` (None while no worker
+        fleet exists — sync mode, or before start_workers): fleet totals
+        plus the per-worker rows `reporting.worker_health_table`
+        renders."""
+        stats = self.worker_stats()
+        if not stats:
+            return None
+        return {"n_workers": len(stats),
+                "alive": sum(1 for s in stats if s["alive"]),
+                "pumps": sum(s["pumps"] for s in stats),
+                "engine_steps": sum(s["engine_steps"] for s in stats),
+                "pump_errors": sum(s["pump_errors"] for s in stats),
+                "per_worker": stats}
+
+    def _sample_pressure_gauges(self):
+        """Per-step pressure gauges (S6 of the telemetry PR): brownout
+        ladder level and sheds-by-cause sampled into registry gauges every
+        gateway step, so the time series shows the ladder's transitions
+        and which pressure valve opened — the cumulative counters alone
+        can't show *when*."""
+        g = self.registry.gauge
+        g("pressure.brownout_level").set(
+            self.brownout.level if self.brownout is not None else 0)
+        for cause, n in self.metrics.reject_reason_counts().items():
+            g(f"pressure.shed_{cause}").set(n)
 
     # ---------------------------------------------------------------- run
     def step(self) -> int:
@@ -948,6 +1022,7 @@ class Gateway:
             self.queue.extend_leases(list(self._inflight), self.lease_seconds)
         depth = self.queue.depth()
         self.metrics.record_gauges(depth, active)
+        self._sample_pressure_gauges()
         if not any(r.healthy for r in self.replicas):
             if self._recovery_pending():
                 # capacity returns by itself after probation; don't fail

@@ -151,6 +151,11 @@ class GatewayMetrics:
         self.failed = 0
         self.retried = 0
         self.illegal_transitions = 0
+        # terminal rejections split by cause ("deadline", "brownout",
+        # "over_capacity", "request_error", ...): the per-cause counters
+        # behind the gateway's shed-by-cause gauges, so the time series
+        # shows WHICH pressure valve opened, not just that one did
+        self.reject_reasons: Dict[str, int] = {}
         self._t0: Optional[float] = None
         # lifecycle observers: callables `(kind, m)` invoked after each
         # lifecycle edge with the event kind ("submit", "dispatch",
@@ -252,6 +257,8 @@ class GatewayMetrics:
                 return
             m.finish_t = now()
             m.finish_reason = reason
+            cause = reason or "unspecified"
+            self.reject_reasons[cause] = self.reject_reasons.get(cause, 0) + 1
             if status == "rejected":
                 self.rejected += 1
             else:
@@ -287,6 +294,12 @@ class GatewayMetrics:
         else:       # rejected before ever dispatching
             tr.add_span("queued", m.submit_t, m.finish_t, cat="request",
                         pid=pid, tid=tid)
+
+    def reject_reason_counts(self) -> Dict[str, int]:
+        """Copy of the terminal-rejection-by-cause counters (thread-safe;
+        the gateway samples these into per-step pressure gauges)."""
+        with self._mu:
+            return dict(self.reject_reasons)
 
     def record_gauges(self, queue_depth: int, active_slots: int):
         with self._mu:      # summary() iterates the deque; appends during
@@ -339,4 +352,9 @@ class GatewayMetrics:
             "stall_max_ms": (max(stalls) * 1e3 if stalls else None),
             "mean_queue_depth": float(np.mean(depths)) if depths else 0.0,
             "mean_slot_utilization": float(np.mean(util)) if util else 0.0,
+            # instantaneous (last-step) gauges: the time-series sampler
+            # turns these into the live queue-depth/active-slots series
+            # the watch sparklines and flight dumps plot
+            "queue_depth": self.gauges[-1][1] if self.gauges else 0,
+            "active_slots": self.gauges[-1][2] if self.gauges else 0,
         }

@@ -187,6 +187,12 @@ class KVCacheManager:
                 + self.radix.evictable_blocks()) * self.pool.block_size
 
     # ------------------------------------------------------------- queries
+    def occupancy(self) -> int:
+        """Blocks currently held (allocated, incl. radix-pinned) — the
+        utilization ledger integrates this per step as pool-block-seconds,
+        turning point-in-time occupancy into a cost over time."""
+        return self.pool.allocated_count()
+
     def match_len(self, prompt) -> int:
         """Cached-prefix probe (tokens), without touching LRU recency —
         the gateway's prefix-affinity policy calls this on every replica."""

@@ -190,6 +190,30 @@ def main():
                     help="run each replica on its own worker thread "
                     "pumping the durable queue (device compute overlaps "
                     "across replicas; step() supervises and waits)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve an OpenMetrics /metrics endpoint (plus "
+                    "/series.jsonl and /snapshot.json) on this port for "
+                    "the duration of the run; 0 binds an ephemeral port "
+                    "(printed). Arms the sampler and utilization ledger")
+    ap.add_argument("--series-out", default=None, metavar="OUT.jsonl",
+                    help="export the sampled metric time series as JSONL "
+                    "(one {name, points} object per series) after the "
+                    "run; arms the sampler")
+    ap.add_argument("--sample-interval", type=float, default=0.05,
+                    metavar="SECONDS",
+                    help="continuous-telemetry sampling cadence (default "
+                    "0.05 s) — used by --metrics-port / --series-out / "
+                    "--watch")
+    ap.add_argument("--watch", action="store_true",
+                    help="print a live sparkline panel of the headline "
+                    "series (queue depth, active slots, pressure gauges) "
+                    "while the run drives, and once more at the end")
+    ap.add_argument("--ledger", action="store_true",
+                    help="arm the per-tenant utilization ledger: each "
+                    "engine dispatch's measured step time is split across "
+                    "co-batched requests by token share (plus KV "
+                    "block-seconds); prints the attribution table after "
+                    "the run")
     args = ap.parse_args()
 
     if args.trace:
@@ -221,6 +245,28 @@ def main():
                                  else None),
                        slo=slo_tiers, flight=args.flight_recorder,
                        async_workers=args.async_workers)
+    sampler = mserver = watch_stop = None
+    if args.ledger or args.metrics_port is not None:
+        gw.arm_ledger()
+    if args.metrics_port is not None or args.series_out or args.watch:
+        sampler = gw.start_sampler(interval_s=args.sample_interval)
+    if args.metrics_port is not None:
+        from repro.obs.export import MetricsServer
+        mserver = MetricsServer(gw.snapshot, port=args.metrics_port,
+                                sampler=sampler, ledger=gw.ledger)
+        print(f"[serve] metrics: http://127.0.0.1:{mserver.start()}/metrics "
+              "(+ /series.jsonl, /snapshot.json)")
+    if args.watch and sampler is not None:
+        import threading
+        watch_stop = threading.Event()
+
+        def _watch():
+            while not watch_stop.wait(0.5):
+                panel = reporting.timeseries_panel(sampler)
+                if panel:
+                    print(panel, flush=True)
+        threading.Thread(target=_watch, name="serve-watch",
+                         daemon=True).start()
     injector = None
     if args.chaos:
         from repro.chaos import FaultInjector, parse_plan
@@ -239,7 +285,17 @@ def main():
                 print(f"[serve] flight recorder: exception dump -> {path}")
         raise
     finally:
-        gw.shutdown()
+        if watch_stop is not None:
+            watch_stop.set()
+        if sampler is not None:
+            sampler.sample_now()    # final point: short runs still export
+        gw.shutdown()               # also stops the sampler thread
+        if mserver is not None:
+            mserver.stop()
+        if args.series_out and sampler is not None:
+            print(f"[serve] series: {len(sampler.names())} series, "
+                  f"{sampler.samples} samples -> "
+                  f"{sampler.export_jsonl(args.series_out)}")
         if args.trace:
             tr = otrace.disable()
             if tr is not None:
@@ -291,6 +347,12 @@ def main():
               f"stall p95={_f(s['stall_p95_ms'])}ms")
     if gw.slo is not None:
         print(reporting.slo_dashboard(gw.slo.report()))
+    if gw.ledger is not None and gw.ledger.stats() is not None:
+        print(reporting.ledger_dashboard(gw.ledger.report()))
+    if args.watch and sampler is not None:
+        panel = reporting.timeseries_panel(sampler)
+        if panel:
+            print(panel)
     if args.dashboard:
         print(reporting.unified_dashboard(gw.snapshot(), gw.metrics.gauges))
 

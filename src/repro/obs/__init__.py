@@ -14,6 +14,13 @@ diurnal bursts, priority tiers), `slo` judges every request against its
 tier's latency targets live, and `flight` is the anomaly flight recorder
 that dumps the evidence rings to a Perfetto file when an SLO breach,
 illegal lifecycle transition, replica failure, or shed spike fires.
+
+The continuous-telemetry layer turns those point-in-time instruments
+into series and exposition: `timeseries` runs the sampler thread pulling
+`snapshot()` into ring-buffered series with windowed aggregates,
+`export` renders OpenMetrics text (with a strict in-repo parser) and
+serves it from a stdlib-HTTP endpoint, and `ledger` attributes each
+engine dispatch's measured device time across tenants by token share.
 """
 from repro.obs import trace
 from repro.obs import workload
@@ -22,8 +29,14 @@ from repro.obs.registry import (Counter, Gauge, Histogram, MetricsRegistry,
 from repro.obs.slo import (DEFAULT_TIER_SLOS, SLOSpec, SLOTracker, load_slos,
                            save_slos)
 from repro.obs.flight import FlightRecorder
+from repro.obs.timeseries import TimeSeriesSampler, flatten_numeric
+from repro.obs.export import (MetricsServer, OpenMetricsParseError,
+                              openmetrics_text, parse_openmetrics)
+from repro.obs.ledger import UtilizationLedger
 
 __all__ = ["Counter", "DEFAULT_BUCKETS", "DEFAULT_TIER_SLOS",
            "FlightRecorder", "Gauge", "Histogram", "MetricsRegistry",
-           "SLOSpec", "SLOTracker", "load_slos", "save_slos", "trace",
-           "workload"]
+           "MetricsServer", "OpenMetricsParseError", "SLOSpec", "SLOTracker",
+           "TimeSeriesSampler", "UtilizationLedger", "flatten_numeric",
+           "load_slos", "openmetrics_text", "parse_openmetrics", "save_slos",
+           "trace", "workload"]

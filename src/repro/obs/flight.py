@@ -69,6 +69,15 @@ class FlightRecorder:
         self.armed = False
         self._own_tracer = None
         self._shed_ts: deque = deque()
+        # optional TimeSeriesSampler: when attached (Gateway.start_sampler
+        # wires it), every dump also carries the recent metric series as
+        # Perfetto counter tracks — the post-mortem shows queue depth,
+        # active slots, and the pressure gauges *leading up to* the
+        # anomaly, not just the spans during it
+        self.sampler = None
+        self.series_window_s = 30.0
+        self.series_prefixes = ("gateway.queue_depth",
+                                "gateway.active_slots", "pressure.")
 
     # ------------------------------------------------------------- arming
     def arm(self) -> "FlightRecorder":
@@ -155,6 +164,7 @@ class FlightRecorder:
         epoch = tracer.epoch if tracer is not None else \
             min((e["t"] for e in self.events), default=0.0)
         events.extend(self._instants(epoch))
+        events.extend(self._counter_events(epoch))
         marker = {"ph": "i", "name": f"TRIGGER:{reason}", "cat": "flightrec",
                   "ts": (now() - epoch) * 1e6, "pid": otrace.HOST_PID,
                   "tid": 0, "s": "g",
@@ -202,6 +212,24 @@ class FlightRecorder:
             out.append({"ph": "i", "name": e["kind"], "cat": "lifecycle",
                         "ts": ts, "pid": otrace.REQUEST_PID,
                         "tid": rid, "s": "t", "args": args})
+        return out
+
+    def _counter_events(self, epoch: float) -> list:
+        """The sampler's recent window as Perfetto ``ph="C"`` counter
+        events (one counter track per series, host process) so the dump
+        shows the metric time series alongside the spans. No-op without
+        an attached sampler."""
+        if self.sampler is None:
+            return []
+        out = []
+        for prefix in self.series_prefixes:
+            for name, pts in self.sampler.recent(self.series_window_s,
+                                                 prefix=prefix).items():
+                for t, v in pts:
+                    out.append({"ph": "C", "name": name, "cat": "series",
+                                "ts": (t + self.sampler.epoch - epoch) * 1e6,
+                                "pid": otrace.HOST_PID, "tid": 0,
+                                "args": {"value": v}})
         return out
 
     # ------------------------------------------------------------- scope

@@ -206,11 +206,25 @@ class Tracer:
 
 _TRACER: Optional[Tracer] = None
 
+# track names announced while no tracer was active. ReplicaWorker threads
+# name their track once, at thread start — if tracing is enabled *after*
+# start_workers (the common serve order: build fleet, then arm
+# observability), a fresh Tracer would otherwise have no thread_name
+# metadata for the per-replica tracks and every async-mode span would
+# render on anonymous tracks. Bounded: only long-lived tracks (one per
+# replica worker) announce through the module API.
+_PENDING_TRACKS: Dict[Tuple[int, int], str] = {}
+_PENDING_MU = threading.Lock()
+
 
 def enable(capacity: int = 1 << 16) -> Tracer:
-    """Install (and return) a fresh process-global tracer."""
+    """Install (and return) a fresh process-global tracer, pre-seeded
+    with every track name announced before this call."""
     global _TRACER
-    _TRACER = Tracer(capacity)
+    t = Tracer(capacity)
+    with _PENDING_MU:
+        t._track_names.update(_PENDING_TRACKS)
+    _TRACER = t
     return _TRACER
 
 
@@ -246,6 +260,11 @@ def add_span(name: str, t0: float, t1: float, **kw):
 
 
 def set_track_name(pid: int, tid: int, name: str):
+    """Name a track on the active tracer AND remember it for tracers
+    enabled later — a worker thread names its replica track exactly once,
+    at thread start, which may precede `enable()`."""
+    with _PENDING_MU:
+        _PENDING_TRACKS[(pid, tid)] = name
     t = _TRACER
     if t is not None:
         t.set_track_name(pid, tid, name)

@@ -283,6 +283,12 @@ class ServeEngine:
         # dashboard shows where dispatch time goes, not just token totals
         self.trace_tid = 0
         self.step_times: Dict[str, Histogram] = {}
+        # utilization attribution sink (obs.ledger.UtilizationLedger or
+        # None): when set, every step's measured wall time is split across
+        # the slots that rode the dispatch by token share — see
+        # Gateway.arm_ledger(). Post-construction like trace_tid, so
+        # reset() (warm reintegration) keeps it.
+        self.ledger = None
         # long-lived frontends (the gateway) keep their own handles; set
         # False so finished requests are not retained engine-side forever
         self.retain_finished = True
@@ -403,12 +409,26 @@ class ServeEngine:
             self.scheduler.throttle(chunk_cap if on else None)
 
     # ------------------------------------------------------------- internals
-    def _observe_step(self, kind: str, t0: float):
-        """Record one step's wall ms under its step kind."""
+    def _observe_step(self, kind: str, t0: float, shares=None):
+        """Record one step's wall ms under its step kind, and — when the
+        utilization ledger is armed — attribute the same measured seconds
+        across the slots that rode the dispatch (`shares` is a list of
+        ``(request_id, tokens, blocks_held)``). One clock read feeds both
+        sinks, so ledger totals and step_times totals agree exactly."""
+        dt = time.perf_counter() - t0
         h = self.step_times.get(kind)
         if h is None:
             h = self.step_times[kind] = Histogram()
-        h.observe((time.perf_counter() - t0) * 1e3)
+        h.observe(dt * 1e3)
+        if self.ledger is not None:
+            pool_blocks = self.manager.occupancy() \
+                if self.manager is not None else 0
+            self.ledger.record_step(kind, dt, shares or [],
+                                    pool_blocks=pool_blocks)
+
+    def _blocks_held(self, slot: int) -> int:
+        """KV blocks this slot currently pins (0 on the dense layout)."""
+        return len(self._slot_blocks[slot]) if self.manager is not None else 0
 
     def step_summary(self) -> Optional[dict]:
         """Per-step-kind wall-time stats (None before the first step):
@@ -478,11 +498,18 @@ class ServeEngine:
         rows so peers are untouched. `adm` is the paged-layout Admission
         (block chain + reused-prefix length) from the manager."""
         t0 = time.perf_counter()
+        tok0 = self.prefill_tokens_computed
         with otrace.span("engine.step", tid=self.trace_tid, step="prefill",
                          slot=slot, prompt_len=len(req.prompt),
                          reused=(adm.n_reused if adm is not None else 0)):
             self._prefill_slot_impl(slot, req, adm)
-        self._observe_step("prefill", t0)
+        # share basis: prompt tokens actually computed (min 1 — a full
+        # prefix hit still occupied the dispatch); blocks may already be 0
+        # if the request retired inside the impl
+        computed = max(1, self.prefill_tokens_computed - tok0)
+        self._observe_step("prefill", t0,
+                           [(req.request_id, computed,
+                             self._blocks_held(slot))])
 
     def _prefill_slot_impl(self, slot: int, req: Request, adm=None):
         greedy = req.sampling.is_greedy
@@ -704,6 +731,10 @@ class ServeEngine:
             # more than the host round-trips saved — finish single-step
             return self._step_fused(live, toks, pos)
         t0 = time.perf_counter()
+        # one token per live slot this dispatch; read blocks before the
+        # reconcile loop can retire slots and release them
+        shares = [(self.active[s].request_id, 1, self._blocks_held(s))
+                  for s in live]
         with otrace.span("engine.step", tid=self.trace_tid, step="decode",
                          live=len(live)):
             decode = self._decode_tok if greedy_batch else self._decode_lg
@@ -737,7 +768,7 @@ class ServeEngine:
                     self._emit(req, tok)
                 if hit_eos or self.budget[s] <= 0:
                     self._retire(s)
-        self._observe_step("decode", t0)
+        self._observe_step("decode", t0, shares)
         return len(live)
 
     def _step_mixed(self) -> int:
@@ -755,11 +786,11 @@ class ServeEngine:
         and flips the slot to decoding."""
         t0 = time.perf_counter()
         with otrace.span("engine.step", tid=self.trace_tid, step="mixed"):
-            n = self._step_mixed_impl()
-        self._observe_step("mixed", t0)
+            n, shares = self._step_mixed_impl()
+        self._observe_step("mixed", t0, shares)
         return n
 
-    def _step_mixed_impl(self) -> int:
+    def _step_mixed_impl(self):
         sched = self.scheduler
         plan = sched.plan_chunk(
             {s: self.active[s].prompt for s in range(self.slots)
@@ -768,6 +799,12 @@ class ServeEngine:
                        if self.active[s] is not None
                        and not sched.prefilling(s)]
         creq = self.active[plan.slot]
+        # ledger shares: each decoding slot gets one token, the chunk slot
+        # its chunk length; blocks read before the reconcile loop retires
+        shares = [(self.active[s].request_id, 1, self._blocks_held(s))
+                  for s in decode_live]
+        shares.append((creq.request_id, len(plan.tokens),
+                       self._blocks_held(plan.slot)))
         toks = np.zeros((self.slots, 1), np.int32)
         for s in decode_live:
             toks[s, 0] = self.active[s].output[-1]
@@ -826,7 +863,7 @@ class ServeEngine:
             first = self._sample_safe(creq, np.asarray(out_c)) \
                 if need_logits else int(out_c)
             self._finish_prefill(plan.slot, creq, first)
-        return len(decode_live) + 1
+        return len(decode_live) + 1, shares
 
     def _step_fused(self, live, toks, pos) -> int:
         """One fused dispatch: up to fused_tokens greedy decode steps in a
@@ -838,11 +875,11 @@ class ServeEngine:
         t0 = time.perf_counter()
         with otrace.span("engine.step", tid=self.trace_tid, step="fused",
                          live=len(live), fused_tokens=self.fused_tokens):
-            n = self._step_fused_impl(live, toks, pos)
-        self._observe_step("fused", t0)
+            n, shares = self._step_fused_impl(live, toks, pos)
+        self._observe_step("fused", t0, shares)
         return n
 
-    def _step_fused_impl(self, live, toks, pos) -> int:
+    def _step_fused_impl(self, live, toks, pos):
         eos = np.full((self.slots,), -1, np.int32)
         steps = np.zeros((self.slots,), np.int32)
         alive = np.zeros((self.slots,), bool)
@@ -861,9 +898,13 @@ class ServeEngine:
         emitted = np.asarray(emitted)
         live_out = np.asarray(live_out)
         steps_out = np.asarray(steps_out)
+        shares = []
         for s in live:
             req = self.active[s]
             used = int(steps[s] - steps_out[s])
+            # ledger share = steps this slot actually advanced in the
+            # burst; blocks read before a possible retire releases them
+            shares.append((req.request_id, used, self._blocks_held(s)))
             self.pos[s] += used
             self.budget[s] -= used
             for t in range(emitted.shape[0]):
@@ -873,7 +914,7 @@ class ServeEngine:
                 self._emit(req, tok)
             if not live_out[s]:
                 self._retire(s)
-        return len(live)
+        return len(live), shares
 
     def _step_spec(self, live, toks, pos) -> int:
         """One speculative dispatch: draft K tokens per live slot (host,
@@ -887,11 +928,11 @@ class ServeEngine:
         t0 = time.perf_counter()
         with otrace.span("engine.step", tid=self.trace_tid, step="spec",
                          live=len(live), spec_tokens=self.spec_tokens):
-            n = self._step_spec_impl(live, toks, pos)
-        self._observe_step("spec", t0)
+            n, shares = self._step_spec_impl(live, toks, pos)
+        self._observe_step("spec", t0, shares)
         return n
 
-    def _step_spec_impl(self, live, toks, pos) -> int:
+    def _step_spec_impl(self, live, toks, pos):
         K = self.spec_tokens
         # packed per-slot operands: draft | eos | steps | live (see builder)
         inp = np.zeros((self.slots, K + 3), np.int32)
@@ -919,10 +960,14 @@ class ServeEngine:
         # the retiring slot's own pages, which can never sit in another
         # slot's (private) rollback range
         shared_blocks = None
+        shares = []
         for s in live:
             req = self.active[s]
             p0 = int(pos[s])
             used = int(steps[s] - steps_out[s])
+            # ledger share = tokens this slot got out of the verify (the
+            # accepted prefix + bonus); blocks read before retire
+            shares.append((req.request_id, used, self._blocks_held(s)))
             a = int(adv[s])
             self.spec_tokens_drafted += K
             self.spec_tokens_accepted += min(int(n_acc[s]), K)
@@ -946,7 +991,7 @@ class ServeEngine:
                 self._emit(req, tok)
             if not live_out[s]:
                 self._retire(s)
-        return len(live)
+        return len(live), shares
 
     @property
     def spec_metrics(self) -> Optional[dict]:

@@ -319,3 +319,63 @@ def test_stress_concurrent_submit_worker_death_requeue(model):
         assert outs[0] == outs[1], f"prompt {prompt} diverged: {outs}"
     st = gw.queue.stats()
     assert st["pending"] == 0 and st["leased"] == 0 and st["dead"] == 0
+
+
+# ------------------------------------------- worker telemetry (S1 + S2)
+
+def test_workers_scope_in_snapshot_and_dashboard(model):
+    """Worker health reaches the unified snapshot as a `workers` scope
+    (omitted while no fleet exists) and renders as the worker-health
+    table in the dashboard."""
+    from repro.core import reporting
+    params, cfg = model
+    gw = Gateway.build(params, cfg, replicas=2, batch_slots=2, cache_len=32,
+                       async_workers=True)
+    assert "workers" not in gw.snapshot()       # no fleet yet
+    reqs = [gw.submit(p, max_new_tokens=3) for p in PROMPTS]
+    gw.run()
+    snap = gw.snapshot()
+    ws = snap["workers"]
+    assert ws["n_workers"] == 2 and ws["alive"] == 2
+    assert ws["engine_steps"] > 0 and ws["pumps"] > 0
+    assert [w["replica"] for w in ws["per_worker"]] == [0, 1]
+    dash = reporting.unified_dashboard(snap)
+    assert "worker fleet" in dash and "replica0" in dash and "2/2" in dash
+    gw.shutdown()
+    assert all(r.done for r in reqs)
+
+
+def test_worker_tracks_named_when_tracing_enabled_late(model):
+    """The common serve order is build the fleet, then arm observability.
+    Worker threads announce their per-replica track name once, at thread
+    start; a tracer enabled *after* `start_workers` must still carry the
+    thread_name metadata, and every async-mode engine span must land on
+    a named per-replica track in the Perfetto export."""
+    params, cfg = model
+    gw = Gateway.build(params, cfg, replicas=2, batch_slots=2, cache_len=32)
+    gw.start_workers()
+    # wait until every worker thread has pumped (its announce line ran)
+    deadline = time.monotonic() + 5.0
+    while not all(s["pumps"] > 0 for s in gw.worker_stats()) \
+            and time.monotonic() < deadline:
+        time.sleep(0.005)
+    tr = otrace.enable()
+    try:
+        reqs = [gw.submit(p, max_new_tokens=4) for p in PROMPTS]
+        gw.run()
+        gw.shutdown()
+        assert all(r.done for r in reqs)
+        events = tr.events()
+        meta = {(e["pid"], e["tid"]): e["args"]["name"] for e in events
+                if e["ph"] == "M" and e["name"] == "thread_name"}
+        for rid in (0, 1):
+            assert meta.get((otrace.HOST_PID, rid)) == f"replica{rid}", \
+                f"replica{rid} track unnamed: late enable lost the announce"
+        steps = [e for e in events
+                 if e["ph"] == "X" and e["name"] == "engine.step"]
+        assert steps
+        for e in steps:
+            assert meta.get((e["pid"], e["tid"]), "").startswith("replica"), \
+                f"engine.step span on anonymous track {(e['pid'], e['tid'])}"
+    finally:
+        otrace.disable()

@@ -210,14 +210,15 @@ class TestTracer:
 
 def _assert_trace_schema(events):
     """The Chrome-trace contract the exporter promises: required fields
-    per phase (complete "X" spans, "M" metadata, and the flight
-    recorder's "i" instants), and begin/end consistency — spans sharing a
-    track either nest fully or are disjoint (the code is single-threaded
-    per track, so a partial overlap means a broken timestamp)."""
+    per phase (complete "X" spans, "M" metadata, the flight recorder's
+    "i" instants and "C" counter tracks), and begin/end consistency —
+    spans sharing a track either nest fully or are disjoint (the code is
+    single-threaded per track, so a partial overlap means a broken
+    timestamp)."""
     assert events, "empty trace"
     by_track = {}
     for e in events:
-        assert e["ph"] in ("X", "M", "i"), e
+        assert e["ph"] in ("X", "M", "i", "C"), e
         assert {"ph", "name", "pid", "tid", "ts"} <= set(e), e
         if e["ph"] == "M":
             assert e["name"] in ("process_name", "thread_name")
@@ -226,6 +227,10 @@ def _assert_trace_schema(events):
         if e["ph"] == "i":
             # instant events carry a scope instead of a duration
             assert e["s"] in ("g", "p", "t"), e
+            continue
+        if e["ph"] == "C":
+            # counter events (sampler series in flight dumps) carry a value
+            assert "value" in e["args"], e
             continue
         assert "dur" in e and e["dur"] >= 0 and e["ts"] >= 0
         assert "cat" in e
